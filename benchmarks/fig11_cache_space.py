@@ -1,0 +1,31 @@
+"""Fig 11: maximum available KV-cache space (blocks of 16 tokens) across
+systems and models.  Paper: Hetis provides up to 1.87x more cache blocks.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import LLAMA_13B, LLAMA_70B, OPT_30B
+from repro.sim import HetisSystem, HexgenSystem, SplitwiseSystem
+
+BLOCK_TOKENS = 16
+
+
+def main() -> None:
+    cl = ClusterSpec.paper_testbed()
+    for prof in (LLAMA_13B, OPT_30B, LLAMA_70B):
+        caps = {}
+        for cls in (HetisSystem, HexgenSystem, SplitwiseSystem):
+            sys_ = cls(prof, cl)
+            caps[sys_.name] = sys_.kv_capacity_tokens() / BLOCK_TOKENS
+            emit(f"fig11/{prof.name}/{sys_.name}", 0.0,
+                 f"blocks={caps[sys_.name]:.0f}")
+        best_base = max(caps["hexgen"], caps["splitwise"])
+        emit(f"fig11/{prof.name}/advantage", 0.0,
+             f"x{caps['hetis'] / best_base:.2f} vs best baseline "
+             f"(paper up to 1.87x)")
+
+
+if __name__ == "__main__":
+    main()

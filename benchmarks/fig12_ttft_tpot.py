@@ -1,0 +1,38 @@
+"""Fig 12: P95 TTFT / TPOT for Llama-70B at the paper's fixed rates
+(SG 1.5, HE 6, LB 0.8 req/s).  Paper: Hetis up to 1.22x/1.47x better TTFT
+than HexGen/Splitwise and up to 1.39x better TPOT.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import LLAMA_70B
+from repro.sim import (HetisSystem, HexgenSystem, SplitwiseSystem,
+                       make_trace, simulate)
+
+RATES = {"sharegpt": 1.5, "humaneval": 6.0, "longbench": 0.8}
+
+
+def main() -> None:
+    cl = ClusterSpec.paper_testbed()
+    for wl, rate in RATES.items():
+        results = {}
+        trace = make_trace(wl, rate, 30.0, seed=2)
+        for cls in (HetisSystem, HexgenSystem, SplitwiseSystem):
+            sys_ = cls(LLAMA_70B, cl)
+            res = simulate(sys_, trace, wl, rate, max_sim_seconds=240.0)
+            results[sys_.name] = res
+            emit(f"fig12/{wl}/{sys_.name}/p95_ttft", res.p95_ttft() * 1e6,
+                 "")
+            emit(f"fig12/{wl}/{sys_.name}/p95_tpot", res.p95_tpot() * 1e6,
+                 "")
+        h = results["hetis"]
+        emit(f"fig12/{wl}/advantage", 0.0,
+             f"ttft_vs_hexgen=x{results['hexgen'].p95_ttft()/h.p95_ttft():.2f} "
+             f"ttft_vs_splitwise=x{results['splitwise'].p95_ttft()/h.p95_ttft():.2f} "
+             f"tpot_vs_hexgen=x{results['hexgen'].p95_tpot()/h.p95_tpot():.2f}")
+
+
+if __name__ == "__main__":
+    main()

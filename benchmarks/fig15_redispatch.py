@@ -1,0 +1,141 @@
+"""Fig 15: (a) benefit of re-dispatching vs plain LIFO preemption on output
+latency (paper: mean 1.06x, P95 1.14x better); (b) head-wise cache
+management overhead — REAL timings of the paged pool: storage ops increase
+(paper +13%) but multi-core-indexed fetch gets faster (paper -26%).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import LLAMA_13B
+from repro.models.config import ModelConfig
+from repro.serving.kvcache import PagedHeadCache
+from repro.sim import HetisSystem, make_trace, simulate
+
+
+def part_a() -> None:
+    """§5.3 policy microbenchmark: one device becomes memory-exhausted while
+    the cluster still has aggregate space (the paper's imbalance scenario).
+    Re-dispatching migrates the victim's heads and keeps it decoding; LIFO
+    preemption evicts it and pays a full re-prefill + requeue delay."""
+    from repro.core.dispatcher import (AttnRequest, WorkerState,
+                                       apply_placement, dispatch_lp,
+                                       current_attention_time,
+                                       handle_memory_exhaustion,
+                                       release_request)
+    from repro.core.profiler import (analytic_attention_model,
+                                     analytic_transfer_model)
+    from repro.core.cluster import DEVICE_CLASSES
+    from repro.core.costmodel import dense_module_time
+
+    p13 = LLAMA_13B
+
+    def build_state():
+        ws = [
+            WorkerState(0, analytic_attention_model(DEVICE_CLASSES["A100"],
+                                                    p13), None, 12e9),
+            WorkerState(1, analytic_attention_model(DEVICE_CLASSES["3090"],
+                                                    p13),
+                        analytic_transfer_model(12.5), 18e9),
+            WorkerState(2, analytic_attention_model(DEVICE_CLASSES["3090"],
+                                                    p13),
+                        analytic_transfer_model(12.5), 18e9),
+        ]
+        reqs = [AttnRequest(rid=i, ctx_len=2500 + 500 * i,
+                            n_heads=p13.n_heads, group_ratio=p13.gqa_ratio,
+                            head_dim=p13.head_dim, arrival=float(i))
+                for i in range(10)]
+        pl = dispatch_lp(ws, reqs)
+        apply_placement(ws, reqs, pl)
+        return ws, reqs
+
+    # the hot device loses headroom (e.g. a co-located burst)
+    def exhaust(ws):
+        ws[0].capacity_bytes = ws[0].cache_bytes * 0.98
+
+    r = p13.gqa_ratio
+    dh = p13.head_dim
+
+    # --- re-dispatching (Hetis) -------------------------------------------
+    ws, reqs = build_state()
+    exhaust(ws)
+    decisions, evicted = handle_memory_exhaustion(ws, reqs, device_id=0)
+    t_attn = current_attention_time(ws, r, dh)
+    migrated = sum(d.migrated_bytes for d in decisions)
+    # migration rides the overlap window (§6): latency impact ~ 0
+    t_redisp = t_attn
+    emit("fig15a/redispatch/token_latency", t_redisp * 1e6,
+         f"migrated_gb={migrated/1e9:.2f} evicted={len(evicted)}")
+
+    # --- LIFO preemption (vLLM-style baseline) ---------------------------
+    ws, reqs = build_state()
+    exhaust(ws)
+    local = sorted((a for a in reqs if 0 in a.placement),
+                   key=lambda a: a.arrival, reverse=True)
+    victim = local[0]
+    release_request(ws, victim)
+    t_attn = current_attention_time(ws, r, dh)
+    # the victim recomputes its whole context later: amortized penalty per
+    # token across its remaining output (200 tokens assumed, paper W/L mix)
+    t_prefill = dense_module_time(DEVICE_CLASSES["A100"], p13,
+                                  victim.ctx_len, phase="prefill")
+    t_lifo = t_attn + t_prefill / 200.0
+    emit("fig15a/lifo/token_latency", t_lifo * 1e6,
+         f"victim_ctx={victim.ctx_len} re_prefill_ms={t_prefill*1e3:.1f}")
+    emit("fig15a/benefit", 0.0,
+         f"mean=x{t_lifo / t_redisp:.3f} (paper 1.06x mean / 1.14x p95; "
+         f"re-dispatch keeps the victim decoding, LIFO recomputes "
+         f"{victim.ctx_len} tokens)")
+
+
+def part_b() -> None:
+    cfg = ModelConfig(name="bench", family="dense", n_layers=8, d_model=256,
+                      n_heads=8, n_kv_heads=4, d_ff=512, vocab_size=1000,
+                      head_dim=32, dtype="float32")
+    # head-granular pool
+    kv = PagedHeadCache(cfg, {0: 256, 1: 256}, page_size=16)
+    L, dh = cfg.n_layers, cfg.head_dim
+    k = np.random.rand(L, 128, dh).astype(np.float32)
+    rid = 0
+    for g in range(cfg.n_kv_heads):
+        kv.ensure_capacity(rid, g, g % 2, 128)
+        kv.lengths[(rid, g)] = 128
+
+    def store_headwise():
+        for g in range(cfg.n_kv_heads):
+            kv.store_prompt(rid, g, k, k)
+
+    def fetch_headwise():
+        kv.gather_dense(rid, 128)
+
+    t_store = time_fn(store_headwise, repeats=5)
+    t_fetch = time_fn(fetch_headwise, repeats=5)
+    # token-granular baseline: one chain for all heads (vLLM-style)
+    kt = np.random.rand(L, 128, cfg.n_kv_heads, dh).astype(np.float32)
+    dense_k = np.zeros_like(kt)
+
+    def store_tokenwise():
+        dense_k[:] = kt
+
+    def fetch_tokenwise():
+        _ = dense_k.copy()
+
+    t_store_tok = time_fn(store_tokenwise, repeats=5)
+    t_fetch_tok = time_fn(fetch_tokenwise, repeats=5)
+    emit("fig15b/store_headwise", t_store, f"vs_tokenwise="
+         f"{t_store / max(1e-9, t_store_tok):.2f}x (paper +13%)")
+    emit("fig15b/fetch_headwise", t_fetch, f"vs_tokenwise="
+         f"{t_fetch / max(1e-9, t_fetch_tok):.2f}x (paper -26% on GPU "
+         f"w/ multicore indexing)")
+
+
+def main() -> None:
+    part_a()
+    part_b()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Fig 16: (a) re-dispatching factor Θ sweep — too small => migration storm,
+too large => imbalance; (b) robustness to profiling error — ±20% coefficient
+perturbation should cost <= ~6.9% latency (paper).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import LLAMA_13B
+from repro.sim import HetisSystem, make_trace, simulate
+
+
+def main() -> None:
+    cl = ClusterSpec.paper_testbed()
+    trace = make_trace("sharegpt", rate=4.0, duration=25.0, seed=6)
+
+    # (a) theta sweep
+    base_lat = None
+    for theta in (0.1, 0.25, 0.5, 1.0, 2.0):
+        sys_ = HetisSystem(LLAMA_13B, cl, theta=theta)
+        res = simulate(sys_, trace, "sharegpt", 4.0, max_sim_seconds=240.0)
+        lat = res.normalized_latency()
+        if theta == 0.5:
+            base_lat = lat
+        emit(f"fig16a/theta_{theta}", lat * 1e6,
+             f"redispatches={sys_.redispatches} "
+             f"migrated_gb={sys_.migrated_bytes/1e9:.2f}")
+
+    # (b) profiling error
+    clean = simulate(HetisSystem(LLAMA_13B, cl), trace, "sharegpt", 4.0,
+                     max_sim_seconds=240.0).normalized_latency()
+    worst = 0.0
+    for seed in range(3):
+        sys_ = HetisSystem(LLAMA_13B, cl, model_error=0.2, seed=seed)
+        res = simulate(sys_, trace, "sharegpt", 4.0, max_sim_seconds=240.0)
+        worst = max(worst, res.normalized_latency())
+        emit(f"fig16b/err20_seed{seed}", res.normalized_latency() * 1e6,
+             f"prolongation={100*(res.normalized_latency()/clean - 1):.1f}%")
+    emit("fig16b/max_prolongation", 0.0,
+         f"{100*(worst/clean - 1):.1f}% (paper <= 6.9%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Fig 2: decoding MLP vs Attention time of one Llama-70B layer per device
+(seq len 1000).  Paper: P100 lags A100 by up to 40.4x on MLP while the
+Attention gap is far smaller — the wedge that motivates module-level
+parallelism (O1/O2).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cluster import DEVICE_CLASSES
+from repro.core.costmodel import (LLAMA_70B, attn_module_time,
+                                  dense_module_time)
+
+BATCH, CTX = 25, 1000
+
+
+def main() -> None:
+    ref_mlp = dense_module_time(DEVICE_CLASSES["A100"], LLAMA_70B, BATCH,
+                                n_layers=1)
+    ref_attn = attn_module_time(DEVICE_CLASSES["A100"], LLAMA_70B, BATCH,
+                                CTX, n_layers=1)
+    for cls_name in ("A100", "3090", "P100"):
+        cls = DEVICE_CLASSES[cls_name]
+        mlp = dense_module_time(cls, LLAMA_70B, BATCH, n_layers=1)
+        attn = attn_module_time(cls, LLAMA_70B, BATCH, CTX, n_layers=1)
+        emit(f"fig2/{cls_name}/mlp", mlp * 1e6,
+             f"gap={mlp / ref_mlp:.1f}x")
+        emit(f"fig2/{cls_name}/attention", attn * 1e6,
+             f"gap={attn / ref_attn:.1f}x")
+    # the wedge itself
+    p100_mlp = dense_module_time(DEVICE_CLASSES["P100"], LLAMA_70B, BATCH,
+                                 n_layers=1)
+    p100_attn = attn_module_time(DEVICE_CLASSES["P100"], LLAMA_70B, BATCH,
+                                 CTX, n_layers=1)
+    emit("fig2/wedge", 0.0,
+         f"mlp_gap={p100_mlp / ref_mlp:.1f}x attn_gap="
+         f"{p100_attn / ref_attn:.1f}x paper=40.4x/~2x")
+
+
+if __name__ == "__main__":
+    main()

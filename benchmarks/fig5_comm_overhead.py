@@ -1,0 +1,55 @@
+"""Fig 5: head-wise vs sequence-wise Attention-split communication overhead
+(Llama-70B, 100 Gbps).  Paper: 2.68x lower overhead at 20% offload with one
+worker; 3.55x with four workers.
+
+Volumes per decode step (one token), B concurrent requests:
+  head split:  offloaded query heads h move (q per q-head + K,V per kv-group
+               + result per q-head) = (2 + 2/r) * h * dh * bytes per request
+  seq split:   every worker holding a cache chunk of a request receives the
+               FULL q of all H heads and returns a partial result + softmax
+               stats for all H heads: >= 2 * H * dh * bytes per worker per
+               request, regardless of chunk size (§4.2).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.costmodel import LLAMA_70B
+from repro.core.profiler import analytic_transfer_model
+
+B = 32                  # concurrent decode batch
+LINK_GBPS = 12.5        # 100 Gbps
+
+
+def volumes(frac_offload: float, n_workers: int):
+    p = LLAMA_70B
+    dh, H, r = p.head_dim, p.n_heads, p.gqa_ratio
+    bts = p.dtype_bytes
+    h_off = frac_offload * H
+    head_v = (2.0 + 2.0 / r) * h_off * dh * bts * B * p.n_layers
+    # seq split: the offloaded fraction of cache lives on n_workers chunks
+    seq_v = n_workers * (2.0 * H * dh) * bts * B * p.n_layers
+    return head_v, seq_v
+
+
+def main() -> None:
+    tm = analytic_transfer_model(LINK_GBPS)
+    # (a) one worker, 20% offload
+    hv, sv = volumes(0.2, 1)
+    th, ts = tm.time_s(hv), tm.time_s(sv)
+    emit("fig5a/head_split", th * 1e6, f"bytes={hv:.3e}")
+    emit("fig5a/seq_split", ts * 1e6, f"bytes={sv:.3e}")
+    emit("fig5a/advantage", 0.0, f"x{ts / th:.2f} paper=2.68x")
+    # (b) four workers, even split (100% offloaded across 4).  Everything
+    # transits the primary's NIC: head split moves disjoint head subsets
+    # once; seq split replicates the FULL q to every cache-chunk holder.
+    hv, sv = volumes(1.0, 4)
+    th = tm.time_s(hv)
+    ts = tm.time_s(sv)
+    emit("fig5b/head_split", th * 1e6, f"bytes={hv:.3e}")
+    emit("fig5b/seq_split", ts * 1e6, f"bytes={sv:.3e}")
+    emit("fig5b/advantage", 0.0, f"x{ts / th:.2f} paper=3.55x")
+
+
+if __name__ == "__main__":
+    main()

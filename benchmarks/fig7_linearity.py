@@ -1,0 +1,46 @@
+"""Fig 7: Attention-time linearity in (heads, cache) — measured on the LOCAL
+device with real JAX attention, then fit with the Eq (3) model.
+
+(a) batch-size independence at fixed total heads x cache;
+(b) linear in cache size;  (c) linear in head count.
+Derived reports the least-squares R^2 (paper: accuracy up to 93.8%).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.profiler import fit_attention_model, profile_attention
+
+
+def main() -> None:
+    samples = profile_attention(head_dim=64,
+                                head_grid=(1, 2, 4, 6, 8, 12),
+                                ctx_grid=(64, 128, 256, 512, 768, 1024),
+                                batch=2, repeats=3)
+    model, r2 = fit_attention_model(samples)
+    emit("fig7/fit_a_per_head", model.a * 1e6, f"us/head")
+    emit("fig7/fit_b_per_gb", model.b * 1e9 * 1e6, "us/GB")
+    emit("fig7/fit_c", model.c * 1e6, "us intercept")
+    emit("fig7/r2", 0.0, f"R2={r2:.4f} paper_accuracy=93.8%")
+
+    # (b) linearity in cache at fixed heads
+    rows = [(g, t) for h, g, t in samples if h == 8]
+    if len(rows) >= 3:
+        g = np.array([r[0] for r in rows])
+        t = np.array([r[1] for r in rows])
+        corr = np.corrcoef(g, t)[0, 1]
+        emit("fig7b/cache_linearity", 0.0, f"pearson={corr:.4f}")
+    # (c) linearity in heads at fixed cache
+    by_h = {}
+    for h, g, t in samples:
+        by_h.setdefault(h, []).append(t)
+    hs = sorted(by_h)
+    means = [float(np.mean(by_h[h])) for h in hs]
+    corr = np.corrcoef(hs, means)[0, 1]
+    emit("fig7c/head_linearity", 0.0, f"pearson={corr:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Figs 8-10: normalized end-to-end latency vs request rate, three models x
+three datasets x three systems, on the paper's testbed (4xA100 + 4x3090 +
+4xP100, 100 Gbps).  Derived reports Hetis' advantage (paper: up to 2.25x
+throughput vs Splitwise, 1.33x vs HexGen).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import LLAMA_13B, LLAMA_70B, OPT_30B
+from repro.sim import (HetisSystem, HexgenSystem, SplitwiseSystem,
+                       make_trace, simulate)
+
+MODELS = {"llama-13b": LLAMA_13B, "opt-30b": OPT_30B, "llama-70b": LLAMA_70B}
+RATES = {"sharegpt": (0.5, 1.5, 3.0), "humaneval": (2.0, 6.0, 10.0),
+         "longbench": (0.2, 0.8, 1.5)}
+DURATION = 30.0
+
+
+def main() -> None:
+    cl = ClusterSpec.paper_testbed()
+    for mname, prof in MODELS.items():
+        for wl, rates in RATES.items():
+            for rate in rates:
+                trace = make_trace(wl, rate, DURATION, seed=1)
+                lat = {}
+                for cls in (HetisSystem, HexgenSystem, SplitwiseSystem):
+                    sys_ = cls(prof, cl)
+                    res = simulate(sys_, trace, wl, rate,
+                                   max_sim_seconds=240.0)
+                    lat[sys_.name] = res.normalized_latency()
+                    emit(f"fig8_10/{mname}/{wl}/r{rate}/{sys_.name}",
+                         res.normalized_latency() * 1e6,
+                         f"served={len(res.served)}/{len(trace)} "
+                         f"tput={res.throughput():.2f}req/s")
+                if lat["hetis"] == lat["hetis"]:  # not NaN
+                    adv_h = lat["hexgen"] / lat["hetis"]
+                    adv_s = lat["splitwise"] / lat["hetis"]
+                    emit(f"fig8_10/{mname}/{wl}/r{rate}/advantage", 0.0,
+                         f"vs_hexgen=x{adv_h:.2f} vs_splitwise=x{adv_s:.2f}")
+
+
+if __name__ == "__main__":
+    main()

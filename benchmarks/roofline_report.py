@@ -1,0 +1,37 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh): three terms in seconds, the dominant term,
+MODEL_FLOPS / HLO_FLOPs, and peak memory.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def main() -> None:
+    if not RESULTS.exists():
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            emit(f"roofline/{f.stem}", 0.0, r.get("status", "?")
+                 + ":" + r.get("reason", r.get("error", ""))[:60])
+            continue
+        t = r["roofline_s"]
+        total = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        emit(f"roofline/{f.stem}", total * 1e6,
+             f"dom={r['dominant_term']} comp={t['compute_s']:.3f}s "
+             f"mem={t['memory_s']:.3f}s coll={t['collective_s']:.3f}s "
+             f"useful={r['useful_flops_ratio']:.2f} "
+             f"peak={r['memory']['peak_gb']:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

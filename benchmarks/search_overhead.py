@@ -1,0 +1,39 @@
+"""§7.4 searching overhead: sigma* generation time on the local testbed and
+the 5-GPU-type x 32-GPU simulation (paper: 4 s local, 15 s at scale —
+executed once before deployment).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import LLAMA_70B
+from repro.core.parallelizer import RequestDistribution, search
+
+
+def main() -> None:
+    r = RequestDistribution(batch=25, prefill_len=512, decode_ctx=1000)
+    cl = ClusterSpec.paper_testbed()
+    t0 = time.perf_counter()
+    plan = search(cl, LLAMA_70B, r)
+    t_local = time.perf_counter() - t0
+    emit("search/testbed", t_local * 1e6,
+         f"primaries={len(plan.primary_workers)} "
+         f"pool={len(plan.attention_workers)} (paper 4s)")
+
+    big = ClusterSpec.build([("H100", 8)] * 4 + [("A100", 8)] * 4
+                            + [("3090", 8)] * 4 + [("L4", 8)] * 4
+                            + [("P100", 8)] * 4)
+    t0 = time.perf_counter()
+    plan = search(big, LLAMA_70B, RequestDistribution(batch=200,
+                                                      decode_ctx=1000))
+    t_big = time.perf_counter() - t0
+    emit("search/5x32", t_big * 1e6,
+         f"primaries={len(plan.primary_workers)} "
+         f"pool={len(plan.attention_workers)} (paper 15s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Table 1: per-device iteration time, OPT-2.7B (prefill B=3, decode B=25).
+
+Reports the modelled iteration times and the A100/x gaps; the paper's
+measured gaps are prefill 2.45x (3090) / 24.5x (P100) and decode 1.47x /
+7.93x — derived shows ours for calibration cross-check.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cluster import DEVICE_CLASSES
+from repro.core.costmodel import (OPT_2_7B, attn_module_time,
+                                  dense_module_time, logits_time)
+
+PREFILL_B, PREFILL_LEN = 3, 512
+DECODE_B, DECODE_CTX = 25, 512
+
+
+def iteration_time(cls_name: str, phase: str) -> float:
+    cls = DEVICE_CLASSES[cls_name]
+    p = OPT_2_7B
+    if phase == "prefill":
+        tokens, ctx = PREFILL_B * PREFILL_LEN, PREFILL_LEN
+        batch = PREFILL_B
+    else:
+        tokens, ctx = DECODE_B, DECODE_CTX
+        batch = DECODE_B
+    t = dense_module_time(cls, p, tokens, phase=phase)
+    t += attn_module_time(cls, p, batch, ctx, phase=phase)
+    t += logits_time(cls, p, batch if phase == "decode" else tokens)
+    return t
+
+
+def main() -> None:
+    ref = {ph: iteration_time("A100", ph) for ph in ("prefill", "decode")}
+    paper = {("A100", "prefill"): 0.06, ("3090", "prefill"): 0.147,
+             ("P100", "prefill"): 1.47, ("A100", "decode"): 0.0097,
+             ("3090", "decode"): 0.0143, ("P100", "decode"): 0.077}
+    for cls in ("A100", "3090", "P100"):
+        for ph in ("prefill", "decode"):
+            t = iteration_time(cls, ph)
+            gap = t / ref[ph]
+            paper_gap = paper[(cls, ph)] / paper[("A100", ph)]
+            emit(f"table1/{cls}/{ph}", t * 1e6,
+                 f"gap_vs_A100={gap:.2f}x paper={paper_gap:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

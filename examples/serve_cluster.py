@@ -1,0 +1,45 @@
+"""End-to-end serving driver (the paper's kind of system): batched requests
+through the full Hetis control plane — Dispatcher LP placements, paged
+head-granular KV cache, continuous batching, re-dispatch on pressure —
+with REAL JAX compute on a reduced model.
+
+  PYTHONPATH=src python examples/serve_cluster.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.cluster import ClusterSpec
+from repro.models import transformer as T
+from repro.serving import EngineConfig, InferenceEngine, Request
+
+cfg = smoke_config("qwen3-14b")           # GQA family, reduced dims
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+cluster = ClusterSpec.build([("A100", 1), ("3090", 2), ("P100", 1)])
+engine = InferenceEngine(
+    cfg, params, cluster,
+    primary_ids=[0], pool_ids=[1, 2, 3],
+    engine_cfg=EngineConfig(max_batch=16, max_seq=128))
+
+rng = np.random.default_rng(0)
+t = 0.0
+for i in range(12):
+    t += rng.exponential(0.4)
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size,
+                                           int(rng.integers(6, 30)))]
+    engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=12,
+                          arrival=t))
+
+engine.run_until_drained()
+print(f"served {len(engine.finished)} requests in "
+      f"{engine.clock*1e3:.1f} ms simulated time")
+print(f"engine metrics: {engine.metrics}")
+ttfts = sorted(r.ttft for r in engine.finished)
+print(f"TTFT p50={ttfts[len(ttfts)//2]*1e3:.2f}ms "
+      f"p95={ttfts[int(len(ttfts)*0.95)]*1e3:.2f}ms")
+for r in engine.finished[:3]:
+    print(f"  rid={r.rid} placement={r.placement} tokens={r.output}")
+engine.kv.check_invariants()
+print("paged-cache invariants OK")

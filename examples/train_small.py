@@ -1,0 +1,30 @@
+"""Train a reduced model for a few hundred steps with checkpoint/restart.
+
+  PYTHONPATH=src python examples/train_small.py
+"""
+
+import tempfile
+
+from repro.configs import smoke_config
+from repro.training.data import DataConfig
+from repro.training.train_loop import TrainConfig, train
+
+cfg = smoke_config("qwen1.5-0.5b")
+data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8,
+                  noise=0.1)
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    out = train(cfg, data, TrainConfig(steps=120, lr=2e-3,
+                                       ckpt_dir=ckpt_dir, ckpt_every=40))
+    losses = out["losses"]
+    print(f"step   0: loss {losses[0]:.4f}")
+    print(f"step  60: loss {losses[60]:.4f}")
+    print(f"step 119: loss {losses[-1]:.4f}")
+    assert losses[-1] < losses[0], "no learning?"
+
+    # simulate a crash + restart: the loop resumes from the checkpoint
+    resumed = train(cfg, data, TrainConfig(steps=160, lr=2e-3,
+                                           ckpt_dir=ckpt_dir,
+                                           ckpt_every=40))
+    print(f"resumed from step 120 -> 160, "
+          f"final loss {resumed['losses'][-1]:.4f}")

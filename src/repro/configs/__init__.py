@@ -1,0 +1,98 @@
+"""Architecture registry: the 10 assigned architectures + paper models.
+
+Each assigned arch lives in its own module with the exact published config
+(``[source; verified-tier]`` per the brief).  ``get_config(name)`` returns
+the full config; ``smoke_config(name)`` a reduced same-family sibling for
+CPU smoke tests; ``SHAPES``/``cells()`` enumerate the dry-run grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCH_NAMES = [
+    "hymba_1p5b",
+    "dbrx_132b",
+    "deepseek_v3_671b",
+    "hubert_xlarge",
+    "internvl2_1b",
+    "phi3_mini_3p8b",
+    "qwen1p5_0p5b",
+    "minitron_8b",
+    "qwen3_14b",
+    "xlstm_350m",
+]
+
+# canonical ids from the brief -> module names
+ALIASES = {
+    "hymba-1.5b": "hymba_1p5b",
+    "dbrx-132b": "dbrx_132b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "hubert-xlarge": "hubert_xlarge",
+    "internvl2-1b": "internvl2_1b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "qwen1.5-0.5b": "qwen1p5_0p5b",
+    "minitron-8b": "minitron_8b",
+    "qwen3-14b": "qwen3_14b",
+    "xlstm-350m": "xlstm_350m",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return get_config(name).reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned to the LM family; brief)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str              # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) per DESIGN §4."""
+    if cfg.is_encoder_only and shape.step == "decode":
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch; 500k decode skipped (DESIGN §4)"
+    return True, ""
+
+
+def cells(include_skipped: bool = False
+          ) -> List[Tuple[str, str, bool, str]]:
+    """All (arch, shape, runnable, skip_reason) cells — 40 total."""
+    out = []
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for sname, spec in SHAPES.items():
+            ok, why = shape_applicable(cfg, spec)
+            if ok or include_skipped:
+                out.append((arch, sname, ok, why))
+    return out

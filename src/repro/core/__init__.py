@@ -1,0 +1,25 @@
+"""Hetis core: the paper's contribution as hardware-agnostic algorithms.
+
+Modules:
+  cluster      — heterogeneous device inventory (ClusterSpec / DeviceClass)
+  costmodel    — HexGen-style C_comp + C_comm analytic model (§4.1)
+  profiler     — Eq (3)/(4) linear models + fitting / measurement (§5.1)
+  parallelizer — hierarchical sigma* search for primary workers (§4.1)
+  dispatcher   — online min-max LP head dispatching + re-dispatching (§5)
+  hauler       — head-granular cache migration planning (§6)
+"""
+
+from repro.core.cluster import ClusterSpec, Device, DeviceClass, DEVICE_CLASSES
+from repro.core.costmodel import ModelProfile, PAPER_MODELS, StageConfig
+from repro.core.dispatcher import (AttnRequest, WorkerState, apply_placement,
+                                   dispatch_lp, grow_context,
+                                   handle_memory_exhaustion,
+                                   handle_worker_failure, ideal_attention_time,
+                                   maybe_rebalance, release_request)
+from repro.core.hauler import (MigrationScheduler, MigrationTask,
+                               migration_bytes, plan_migration)
+from repro.core.parallelizer import (ParallelPlan, RequestDistribution, search)
+from repro.core.profiler import (AttentionModel, TransferModel,
+                                 analytic_attention_model,
+                                 analytic_transfer_model, fit_attention_model,
+                                 fit_transfer_model, profile_attention)

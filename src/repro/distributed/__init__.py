@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (axis_rules, logical, logical_spec,
+                                        ShardingRules)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the prefill flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, Hq, Sq, dh); k, v: (B, Hkv, Sk, dh).  GQA by head folding."""
+    B, Hq, Sq, dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    r = Hq // Hkv
+    qg = q.reshape(B, Hkv, r, Sq, dh)
+    s = jnp.einsum("bhrqd,bhkd->bhrqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(dh)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window and window > 0:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)      # fully-masked rows
+    out = jnp.einsum("bhrqk,bhkd->bhrqd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Sq, dh).astype(q.dtype)

@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the paged decode-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def paged_attention(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array
+                    ) -> jax.Array:
+    """Decode attention over the head-granular paged pool.
+
+    q:            (B, Hkv, r, dh) new-token queries, grouped per kv head
+    kpool/vpool:  (num_slots, page_size, dh)
+    block_tables: (B, Hkv, max_pages) int32 — slot id per (seq, group, page);
+                  entries past the sequence length may be arbitrary valid ids
+    lengths:      (B,) int32
+    """
+    assert q.ndim == 4 and kpool.ndim == 3 and block_tables.ndim == 3
+    block_tables = jnp.clip(block_tables, 0, kpool.shape[0] - 1)
+    return paged_attention_kernel(q, kpool, vpool,
+                                  block_tables.astype(jnp.int32),
+                                  lengths.astype(jnp.int32),
+                                  interpret=not _on_tpu())

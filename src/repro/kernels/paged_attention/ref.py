@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the head-granular paged decode-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
+                        block_tables: jax.Array, lengths: jax.Array
+                        ) -> jax.Array:
+    """Gather pages into dense K/V, then exact masked decode attention.
+
+    q:            (B, Hkv, r, dh) — one new token per sequence, grouped
+    kpool/vpool:  (num_slots, page, dh) — head-granular physical pool
+    block_tables: (B, Hkv, max_pages) int32 slot ids
+    lengths:      (B,) int32 tokens currently stored per (seq, group)
+    returns       (B, Hkv, r, dh)
+    """
+    B, Hkv, r, dh = q.shape
+    page = kpool.shape[1]
+    max_pages = block_tables.shape[-1]
+    S = max_pages * page
+
+    K = kpool[block_tables]                    # (B, Hkv, P, page, dh)
+    V = vpool[block_tables]
+    K = K.reshape(B, Hkv, S, dh)
+    V = V.reshape(B, Hkv, S, dh)
+
+    s = jnp.einsum("bhrd,bhkd->bhrk", q.astype(jnp.float32),
+                   K.astype(jnp.float32)) / math.sqrt(dh)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]      # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bhrk,bhkd->bhrd", w, V.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:  jit(step, in_shardings, out_shardings).lower(*specs)
+                .compile()  -> memory_analysis() + cost_analysis()
+                + collective bytes parsed from the optimized HLO.
+
+Results are cached as JSON under results/dryrun/ so iteration resumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both|pod|multipod]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ALIASES, ARCH_NAMES, SHAPES, cells, get_config,
+                           shape_applicable)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.partition import to_named
+from repro.launch.steps import build
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, save: bool = True,
+             overrides: dict = None) -> dict:
+    mesh_name = "multipod" if multi_pod else "pod"
+    suffix = "_" + "_".join(f"{k}-{v}" for k, v in sorted(
+        (overrides or {}).items())) if overrides else ""
+    out_path = RESULTS / f"{arch}_{shape_name}_{mesh_name}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "step": shape.step, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        if save:
+            _save(out_path, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    try:
+        t0 = time.perf_counter()
+        bundle = build(cfg, shape, mesh, multi_pod)
+        with mesh:
+            jitted = jax.jit(bundle.fn,
+                             in_shardings=to_named(mesh, bundle.in_shardings),
+                             out_shardings=to_named(mesh,
+                                                    bundle.out_shardings),
+                             donate_argnums=bundle.donate_argnums)
+            lowered = jitted.lower(*bundle.args)
+            t_lower = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        parsed = hlo_analysis.analyze(hlo)
+        flops = parsed["flops"]
+        hbm_bytes = parsed["hbm_bytes"]
+        coll_bytes = parsed["collective_bytes"]
+        terms = hlo_analysis.roofline_terms(flops, hbm_bytes, coll_bytes)
+
+        # MODEL_FLOPS = 6 N_active D (train) / 2 N_active D (inference),
+        # per device (brief: ROOFLINE ANALYSIS)
+        prof = cfg.profile()
+        n_active = prof.total_active_params()
+        if shape.step == "train":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6.0 * n_active * tokens
+        elif shape.step == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * n_active * tokens
+        else:
+            model_flops = 2.0 * n_active * shape.global_batch
+        model_flops_dev = model_flops / n_chips
+
+        rec.update(
+            status="ok",
+            desc=bundle.static_desc,
+            n_chips=n_chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=flops,
+            hbm_bytes_per_device=hbm_bytes,
+            collective_bytes_per_device=coll_bytes,
+            collectives=parsed["collectives"],
+            unknown_trip_counts=parsed["unknown_trip_counts"],
+            cost_analysis_raw={"flops": float(cost.get("flops", 0.0)),
+                               "bytes": float(cost.get("bytes accessed", 0.0))},
+            model_flops_per_device=model_flops_dev,
+            useful_flops_ratio=(model_flops_dev / flops) if flops else 0.0,
+            memory={
+                "argument_gb": getattr(mem, "argument_size_in_bytes", 0) / 1e9,
+                "output_gb": getattr(mem, "output_size_in_bytes", 0) / 1e9,
+                "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 1e9,
+                "peak_gb": (getattr(mem, "argument_size_in_bytes", 0)
+                            + getattr(mem, "temp_size_in_bytes", 0)) / 1e9,
+            },
+            roofline_s=terms,
+        )
+        dom = max(terms, key=terms.get)
+        rec["dominant_term"] = dom
+        print(f"[ok] {arch} {shape_name} {mesh_name}: "
+              f"compile={t_compile:.1f}s "
+              f"args={rec['memory']['argument_gb']:.2f}GB "
+              f"temp={rec['memory']['temp_gb']:.2f}GB "
+              f"flops/dev={flops:.3e} useful={rec['useful_flops_ratio']:.2f} "
+              f"dom={dom} "
+              f"t=({terms['compute_s']*1e3:.2f},{terms['memory_s']*1e3:.2f},"
+              f"{terms['collective_s']*1e3:.2f})ms")
+    except Exception as e:  # noqa: BLE001 — record failures for iteration
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[ERR] {arch} {shape_name} {mesh_name}: {e}")
+    if save:
+        _save(out_path, rec)
+    return rec
+
+
+def _save(path: pathlib.Path, rec: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=1, default=str))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (e.g. "
+                         "kv_cache_dtype=float8_e4m3fn)")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = int(v) if v.isdigit() else v
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}
+    todo = []
+    if args.all:
+        for arch, sname, ok, _ in cells(include_skipped=True):
+            for mp in meshes[args.mesh]:
+                todo.append((arch, sname, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        arch = ALIASES.get(args.arch, args.arch)
+        for mp in meshes[args.mesh]:
+            todo.append((arch, args.shape, mp))
+
+    n_ok = n_err = n_skip = 0
+    for arch, sname, mp in todo:
+        rec = run_cell(arch, sname, mp, force=args.force,
+                       overrides=overrides or None)
+        s = rec["status"]
+        n_ok += s == "ok"
+        n_err += s == "error"
+        n_skip += s == "skipped"
+    print(f"done: ok={n_ok} err={n_err} skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

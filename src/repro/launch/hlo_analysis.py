@@ -1,0 +1,469 @@
+"""Roofline accounting from optimized HLO text.
+
+XLA's ``cost_analysis()`` visits while-loop bodies ONCE, so scanned-layer
+models under-report FLOPs/bytes by ~n_layers x.  This module parses the
+scheduled HLO, builds the computation call graph, multiplies by
+``known_trip_count`` loop multiplicities, and produces:
+
+  * total dot/conv FLOPs                     (compute roofline term)
+  * instruction-level HBM traffic estimate   (memory roofline term):
+    every non-fusion-internal instruction reads its operands and writes its
+    output once (fusions are counted at the call site — exactly the fusion's
+    HBM behaviour); dynamic-update-slice counts only the updated slice
+    (in-place aliasing).
+  * collective operand bytes by type         (collective roofline term)
+
+Hardware constants (TPU v5e, per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_BASES = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "opt-barrier", "partition-id", "replica-id", "iota", "rng-bit-generator",
+    "copy-start", "copy-done",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(m.group(1), 4)
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    params: Dict[str, str]
+    instrs: List[Instr]
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_INSTR_RE = re.compile(r"^\s+(ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+
+
+def _split_top(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [x for x in out if x]
+
+
+def _parse_instr_rest(rest: str) -> Optional[Tuple[str, str, List[str], str]]:
+    """rest = '<type> <op>(<args>)<attrs>' -> (type, op, operand names, attrs)."""
+    rest = rest.strip()
+    if rest.startswith("("):                      # tuple type
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, tail = rest[:i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, tail = rest[:sp], rest[sp:]
+    m = re.match(r"\s*([\w\-]+)\(", tail)
+    if not m:
+        return None
+    op = m.group(1)
+    args_start = m.end()
+    depth = 1
+    i = args_start
+    while i < len(tail) and depth:
+        depth += tail[i] == "("
+        depth -= tail[i] == ")"
+        i += 1
+    args = tail[args_start:i - 1]
+    attrs = tail[i:]
+    ops = []
+    for tok in _split_top(args):
+        mm = re.search(r"%([\w.\-]+)\s*$", tok)
+        if mm:
+            ops.append(mm.group(1))
+    return type_str, op, ops, attrs
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Comp], str]:
+    comps: Dict[str, Comp] = {}
+    entry = ""
+    cur: Optional[Comp] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_RE.match(line)
+            if m:
+                name = m.group(2)
+                params: Dict[str, str] = {}
+                for tok in _split_top(m.group(3)):
+                    pm = re.match(r"([\w.\-]+)\s*:\s*(.+)", tok)
+                    if pm:
+                        params[pm.group(1)] = pm.group(2)
+                cur = Comp(name, params, [])
+                comps[name] = cur
+                if m.group(1):
+                    entry = name
+                continue
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        parsed = _parse_instr_rest(im.group(3))
+        if parsed is None:
+            continue
+        type_str, op, operands, attrs = parsed
+        cur.instrs.append(Instr(im.group(2), type_str, op, operands, attrs,
+                                is_root=bool(im.group(1))))
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# Call-graph multiplicities
+# ---------------------------------------------------------------------------
+
+_CALLREF_RE = re.compile(
+    r"(body|condition|calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count\D*(\d+)')
+
+
+def _multiplicities(comps: Dict[str, Comp], entry: str
+                    ) -> Tuple[Dict[str, float], Dict[str, bool], bool]:
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    is_fusion_body: Dict[str, bool] = {c: False for c in comps}
+    mult[entry] = 1.0
+    unknown_trip = False
+    order = [entry]
+    seen = {entry}
+    # BFS; HLO call graphs are acyclic
+    qi = 0
+    while qi < len(order):
+        cname = order[qi]
+        qi += 1
+        m = mult[cname]
+        for ins in comps[cname].instrs:
+            refs: List[Tuple[str, str]] = [
+                (kind, ref) for kind, ref in _CALLREF_RE.findall(ins.attrs)]
+            bm = _BRANCH_RE.search(ins.attrs)
+            if bm:
+                refs += [("branch", r.strip().lstrip("%"))
+                         for r in bm.group(1).split(",")]
+            factor = m
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    factor = m * int(tm.group(1))
+                else:
+                    unknown_trip = True
+                    factor = m  # conservative
+            for kind, ref in refs:
+                if ref not in comps:
+                    continue
+                if ins.op == "fusion" and kind == "calls":
+                    is_fusion_body[ref] = True
+                mult[ref] += factor
+                if ref not in seen:
+                    seen.add(ref)
+                    order.append(ref)
+    return mult, is_fusion_body, unknown_trip
+
+
+# ---------------------------------------------------------------------------
+# FLOPs / bytes / collectives
+# ---------------------------------------------------------------------------
+
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(ins: Instr, symtab: Dict[str, str]) -> float:
+    out_elems = _type_elems(ins.type_str)
+    lhs_type = symtab.get(ins.operands[0], "") if ins.operands else ""
+    dims = _shape_dims(lhs_type)
+    cm = _LHS_CONTRACT_RE.search(ins.attrs)
+    k = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            di = int(d)
+            if di < len(dims):
+                k *= dims[di]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, symtab: Dict[str, str]) -> float:
+    out_dims = _shape_dims(ins.type_str)
+    out_elems = max(1, _type_elems(ins.type_str))
+    rhs_type = symtab.get(ins.operands[1], "") if len(ins.operands) > 1 else ""
+    rhs_elems = max(1, _type_elems(rhs_type))
+    out_ch = out_dims[-1] if out_dims else 1
+    return 2.0 * out_elems * rhs_elems / max(1, out_ch)
+
+
+_FREE_OPS = {"parameter", "convert", "bitcast", "reshape"}
+
+
+def _fusion_bytes(ins: Instr, symtab: Dict[str, str],
+                  comps: Dict[str, Comp]) -> float:
+    """HBM traffic of one fusion call, fusion-body aware (TPU projection):
+
+      * a fusion param consumed only through dynamic-slice reads only the
+        slice(s), not the whole operand (paged caches!);
+      * a root dynamic-update-slice / scatter writes only the updated slice
+        (in-place aliasing) and its big destination param is not re-read;
+      * a body of only {parameter, convert, bitcast, reshape} is free on TPU
+        (precision conversion folds into the consumer's MXU read).
+    """
+    mref = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+    body = comps.get(mref.group(1)) if mref else None
+    if body is None:
+        return _type_bytes(ins.type_str) + sum(
+            _type_bytes(symtab.get(o, "")) for o in ins.operands)
+
+    body_ops = {i.op for i in body.instrs}
+    if body_ops <= _FREE_OPS | {"copy", "transpose"}:
+        return 0.0  # pure layout/precision change: folds on TPU
+
+    _TRANSPARENT = {"convert", "bitcast", "reshape", "copy"}
+
+    # map param index -> body param name (params are ordered in the header)
+    pnames = list(body.params.keys())
+    body_sym = dict(body.params)
+    by_name: Dict[str, Instr] = {}
+    for i in body.instrs:
+        body_sym[i.name] = i.type_str
+        by_name[i.name] = i
+    users: Dict[str, List[Instr]] = {}
+    for i in body.instrs:
+        for o in i.operands:
+            users.setdefault(o, []).append(i)
+
+    def eff_users(name: str, depth: int = 0) -> List[Instr]:
+        """Users, looking through transparent precision/layout ops."""
+        out: List[Instr] = []
+        if depth > 8:
+            return out
+        for u in users.get(name, []):
+            if u.op in _TRANSPARENT:
+                out.extend(eff_users(u.name, depth + 1))
+            else:
+                out.append(u)
+        return out
+
+    def eff_root(i: Optional[Instr], depth: int = 0) -> Optional[Instr]:
+        """The root, looking backwards through transparent ops."""
+        while (i is not None and i.op in _TRANSPARENT and i.operands
+               and depth < 8):
+            i = by_name.get(i.operands[0])
+            depth += 1
+        return i
+
+    def eff_src(name: str, depth: int = 0) -> str:
+        """Trace an operand back through transparent ops to its source."""
+        while depth < 8:
+            i = by_name.get(name)
+            if i is None or i.op not in _TRANSPARENT or not i.operands:
+                return name
+            name = i.operands[0]
+            depth += 1
+        return name
+
+    root = eff_root(next((i for i in body.instrs if i.is_root),
+                         body.instrs[-1] if body.instrs else None))
+
+    total = 0.0
+    dus_dest = set()
+    if root is not None and root.op in ("dynamic-update-slice", "scatter"):
+        if root.operands:
+            dus_dest.add(eff_src(root.operands[0]))
+    for idx, opnd in enumerate(ins.operands):
+        if idx >= len(pnames):
+            total += _type_bytes(symtab.get(opnd, ""))
+            continue
+        pname = pnames[idx]
+        if pname in dus_dest:
+            continue  # aliased in-place destination
+        uses = eff_users(pname)
+        if uses and all(u.op == "dynamic-slice" for u in uses):
+            total += sum(_type_bytes(u.type_str) for u in uses)
+        else:
+            total += _type_bytes(symtab.get(pname, ""))
+
+    # output charging
+    if root is not None and root.op == "dynamic-update-slice":
+        upd = (_type_bytes(body_sym.get(eff_src(root.operands[1]), ""))
+               if len(root.operands) > 1 else 0)
+        total += 2.0 * upd
+    elif root is not None and root.op == "scatter":
+        upd = (_type_bytes(body_sym.get(eff_src(root.operands[2]), ""))
+               if len(root.operands) > 2 else 0)
+        total += 2.0 * upd
+    else:
+        total += _type_bytes(ins.type_str)
+    return total
+
+
+def analyze(text: str) -> Dict:
+    comps, entry = parse_hlo(text)
+    if not entry:
+        return {"flops": 0.0, "hbm_bytes": 0.0, "collectives": {},
+                "collective_bytes": 0.0, "collective_count": 0,
+                "unknown_trip_counts": True}
+    mult, is_fusion_body, unknown = _multiplicities(comps, entry)
+
+    flops = 0.0
+    hbm = 0.0
+    coll: Dict[str, Dict[str, float]] = {
+        c: {"count": 0.0, "bytes": 0.0} for c in COLLECTIVE_BASES}
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symtab = dict(comp.params)
+        for ins in comp.instrs:
+            symtab[ins.name] = ins.type_str
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, symtab)
+            elif ins.op == "convolution":
+                flops += m * _conv_flops(ins, symtab)
+
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in COLLECTIVE_BASES and not ins.op.endswith("-done"):
+                op_bytes = sum(_type_bytes(symtab.get(o, ""))
+                               for o in ins.operands)
+                if op_bytes == 0:
+                    op_bytes = _type_bytes(ins.type_str)
+                coll[base]["count"] += m
+                coll[base]["bytes"] += m * op_bytes
+
+            if is_fusion_body.get(cname):
+                continue  # fused intermediates don't touch HBM
+            if ins.op in SKIP_BYTES_OPS or ins.op.endswith("-done"):
+                continue
+            if ins.op == "convert":
+                continue  # folds into the consumer on TPU
+            if ins.op == "fusion":
+                hbm += m * _fusion_bytes(ins, symtab, comps)
+                continue
+            if ins.op == "dynamic-update-slice":
+                upd = (_type_bytes(symtab.get(ins.operands[1], ""))
+                       if len(ins.operands) > 1 else 0)
+                hbm += m * 2.0 * upd
+                continue
+            if ins.op == "dynamic-slice":
+                hbm += m * 2.0 * _type_bytes(ins.type_str)
+                continue
+            if ins.op == "scatter":
+                upd = (_type_bytes(symtab.get(ins.operands[2], ""))
+                       if len(ins.operands) > 2 else 0)
+                hbm += m * 2.0 * upd
+                continue
+            out_b = _type_bytes(ins.type_str)
+            in_b = sum(_type_bytes(symtab.get(o, "")) for o in ins.operands)
+            hbm += m * (out_b + in_b)
+
+    total_coll = sum(v["bytes"] for v in coll.values())
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collectives": {k: v for k, v in coll.items() if v["count"]},
+        "collective_bytes": total_coll,
+        "collective_count": sum(v["count"] for v in coll.values()),
+        "unknown_trip_counts": unknown,
+    }
+
+
+# Backwards-compatible helper used by early dryrun versions/tests
+def parse_collectives(text: str) -> Dict:
+    res = analyze(text)
+    out = dict(res["collectives"])
+    out["total_bytes"] = res["collective_bytes"]
+    out["total_count"] = res["collective_count"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms — TPU v5e constants (brief)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # per chip
+ICI_BW = 50e9                   # per link
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   n_chips: int = 1) -> Dict[str, float]:
+    """Three terms in seconds.  Inputs are PER-DEVICE totals (the parsed HLO
+    is the per-partition program), so n_chips=1 by default."""
+    return {
+        "compute_s": flops / (n_chips * PEAK_FLOPS_BF16),
+        "memory_s": hbm_bytes / (n_chips * HBM_BW),
+        "collective_s": collective_bytes / (n_chips * ICI_BW),
+    }

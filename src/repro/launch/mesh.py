@@ -1,0 +1,20 @@
+"""Production mesh construction (brief: MULTI-POD DRY-RUN step 1).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1):
+    """A tiny mesh over whatever devices exist (CPU tests)."""
+    return jax.make_mesh((1, n_devices), ("data", "model"))

@@ -1,0 +1,235 @@
+"""PartitionSpecs for parameters, optimizer state, caches and batches.
+
+Strategy (DESIGN §5):
+  * weights — stacked layer axis unsharded; the TP-largest dim on ``model``,
+    the other big dim on the FSDP axes (``(pod,)data``)   [ZeRO-3 style]
+  * MoE experts — expert dim on ``model`` (EP), inner dim on FSDP
+  * activations — batch on ``(pod,)data``; heads / ff / experts on ``model``
+  * decode KV cache — heads on ``model`` iff the arch's kv-head count
+    divides it (paper-faithful head split), else sequence on ``model``
+    (partial-softmax combine); MLA latent is always sequence-split.
+
+Specs are assigned by parameter *path*, with shape-aware fallbacks, so every
+arch family resolves without per-arch tables.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+MODEL_AXIS_SIZE = 16   # production meshes use a 16-way model axis
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def moe_expert_axes(cfg: ModelConfig, multi_pod: bool):
+    """Experts on the model axis with FSDP inner dims.
+
+    §Perf deepseek train iteration 1 (REFUTED): full EP over (model, data)
+    — every device owning whole experts to avoid per-microbatch weight
+    re-gathers — made collectives 2.9x WORSE (366 s -> 1051 s): under GSPMD
+    the scatter/gather token dispatch against a 256-way-sharded expert
+    buffer lowers to full-buffer all-gathers per microbatch (9.4 GB x 58
+    layers x 16 microbatches), not all-to-alls.  Proper EP needs explicit
+    shard_map routing (ragged all-to-all); kept on the roadmap."""
+    return "model"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def param_pspec(cfg: ModelConfig, path: str, ndim: int, multi_pod: bool) -> P:
+    fsdp = batch_axes(multi_pod)
+    tp = "model"
+    in_group = path.startswith("groups/")
+
+    def stacked(*axes):
+        """Prepend the scanned layer axis when inside a group."""
+        return P(None, *axes) if in_group else P(*axes)
+
+    leaf = path.split("/")[-1]
+
+    # --- embeddings & heads -------------------------------------------------
+    if leaf == "embed":
+        return P(tp, fsdp)
+    if leaf == "lm_head":
+        return P(fsdp, tp)
+    if leaf == "pos_embed":
+        return P(tp, None)
+    if leaf in ("in_proj",) and not in_group:
+        return P(fsdp, None)
+    if leaf == "img_proj":
+        return P(fsdp, None)
+    if leaf == "final_norm":
+        return P(None)
+
+    # --- MoE ------------------------------------------------------------------
+    if leaf == "router":
+        return stacked(fsdp, None)
+    e_axes = moe_expert_axes(cfg, multi_pod)
+    if re.search(r"mlp/(wi|wg)$", path) and ndim == (4 if in_group else 3):
+        if e_axes == "model":
+            return stacked(tp, fsdp, None)     # (L, E, d, ff): EP + FSDP
+        return stacked(e_axes, None, None)     # full EP: whole experts
+    if re.search(r"mlp/wo$", path) and ndim == (4 if in_group else 3):
+        if e_axes == "model":
+            return stacked(tp, None, fsdp)     # (L, E, ff, d)
+        return stacked(e_axes, None, None)
+
+    # --- MLA --------------------------------------------------------------------
+    if leaf == "wdq" or leaf == "wdkv":
+        return stacked(fsdp, None)
+    if leaf == "wuq":
+        return stacked(None, tp)
+    if leaf in ("wuk", "wuv"):
+        return stacked(None, tp, None)         # (L, c, H, dh)
+
+    # --- attention / dense mlp / ssm / xlstm projections -------------------------
+    if leaf in ("wq", "wk", "wv", "wi", "wg", "wz", "wo_gate", "x_proj",
+                "dt_proj", "in_proj"):
+        if ndim == (3 if in_group else 2):
+            return stacked(fsdp, tp)
+        if ndim == (2 if in_group else 1):
+            return stacked(tp)                 # bias-like
+    if leaf in ("wo", "out_proj"):
+        return stacked(tp, fsdp)
+    if leaf in ("bq", "bk", "bv"):
+        return stacked(tp)
+    if leaf in ("conv_w",):
+        return stacked(tp, None)
+    if leaf in ("A_log",):
+        return stacked(tp, None)
+    if leaf in ("D", "dt_bias", "conv_b"):
+        return stacked(tp)
+    if leaf in ("wf",):  # xlstm gate (L, d, H): H tiny -> replicate out dim
+        return stacked(fsdp, None)
+
+    # --- norms / scalars -----------------------------------------------------------
+    return P(*([None] * ndim))
+
+
+def _is_small_gate(cfg: ModelConfig, path: str, shape) -> bool:
+    return False
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, multi_pod: bool):
+    """Tree of PartitionSpec matching an eval_shape'd param tree."""
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        # drop the group index ("groups/0/attn/wq" -> treat uniformly)
+        p = re.sub(r"^groups/\d+/", "groups/", p)
+        spec = param_pspec(cfg, p, leaf.ndim, multi_pod)
+        return _validated(spec, leaf, multi_pod)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def _axis_size(axis, multi_pod: bool) -> int:
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= sizes[a]
+        return out
+    return sizes[axis]
+
+
+def _validated(spec: P, leaf, multi_pod: bool) -> P:
+    """Drop sharding on dims the mesh axis does not divide evenly: pjit
+    argument shardings require divisibility (hymba's 25 heads / 32001 vocab,
+    hubert's 504-class head, batch=1 long-context cells replicate instead)."""
+    new = []
+    for dim, axis in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+        n = _axis_size(axis, multi_pod)
+        if axis is not None and dim >= n and dim % n == 0:
+            new.append(axis)
+        else:
+            new.append(None)
+    return P(*new)
+
+
+# ---------------------------------------------------------------------------
+# Cache / batch specs
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cfg: ModelConfig, cache_shape, multi_pod: bool):
+    """KV caches: (L, B, S, Hkv, dh) — B on data; heads or seq on model."""
+    fsdp = batch_axes(multi_pod)
+    head_split = cfg.kv_heads_shardable(MODEL_AXIS_SIZE)
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        leafname = p.split("/")[-1]
+        if leafname == "pos":
+            return _validated(P(fsdp), leaf, multi_pod)
+        if leafname in ("k", "v"):            # (L, B, S, Hkv, dh)
+            if head_split:
+                return _validated(P(None, fsdp, None, "model", None), leaf,
+                                  multi_pod)
+            return _validated(P(None, fsdp, "model", None, None), leaf,
+                              multi_pod)
+        if leafname in ("ckv", "krope"):      # (L, B, S, c)
+            return _validated(P(None, fsdp, "model", None), leaf, multi_pod)
+        if leafname == "conv":                # (L, B, di, k-1)
+            return _validated(P(None, fsdp, "model", None), leaf, multi_pod)
+        if leafname == "ssm":                 # (L, B, di, n)
+            return _validated(P(None, fsdp, "model", None), leaf, multi_pod)
+        if leafname == "C":                   # (L, B, H, dh, dv)
+            return _validated(P(None, fsdp, None, "model", None), leaf,
+                              multi_pod)
+        if leafname in ("n", "h", "m", "c"):
+            if leaf.ndim == 4:                # (L, B, H, dh)
+                return _validated(P(None, fsdp, None, "model"), leaf,
+                                  multi_pod)
+            if leaf.ndim == 3:                # (L, B, d)
+                return _validated(P(None, fsdp, "model"), leaf, multi_pod)
+            return _validated(P(None, fsdp), leaf, multi_pod)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+def batch_pspecs(cfg: ModelConfig, batch_shape, multi_pod: bool):
+    fsdp = batch_axes(multi_pod)
+
+    def assign(path, leaf):
+        return _validated(P(fsdp, *([None] * (leaf.ndim - 1))), leaf,
+                          multi_pod)
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shape)
+
+
+def dim_axis(dim: int, axis, multi_pod: bool):
+    """axis if it divides dim evenly, else None (for hand-built specs)."""
+    n = _axis_size(axis, multi_pod)
+    return axis if (dim >= n and dim % n == 0) else None
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

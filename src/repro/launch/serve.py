@@ -1,0 +1,64 @@
+"""Serving launcher: run the Hetis engine end-to-end on a (reduced) model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
+      --requests 8 --rate 2.0
+
+Full-size archs on real pods would load checkpoints and use the production
+mesh; on CPU the ``--smoke`` reduced config exercises the identical control
+plane (Dispatcher LP, paged head cache, re-dispatching, eviction).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ALIASES, get_config, smoke_config
+from repro.core.cluster import ClusterSpec
+from repro.models import transformer as T
+from repro.serving import EngineConfig, InferenceEngine, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    if cfg.attn_type != "gqa" or cfg.is_encoder_only:
+        # engine's paged path is GQA-only (DESIGN §3); fall back to a
+        # GQA-family smoke config for the demo
+        cfg = smoke_config("qwen3-14b")
+        print(f"# note: {args.arch} engine demo uses the qwen3 smoke family")
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    cluster = ClusterSpec.build([("A100", 1), ("3090", 2), ("P100", 1)])
+    eng = InferenceEngine(cfg, params, cluster, primary_ids=[0],
+                          pool_ids=[1, 2, 3],
+                          engine_cfg=EngineConfig(max_batch=16, max_seq=128))
+
+    rng = np.random.default_rng(args.seed)
+    t = 0.0
+    for i in range(args.requests):
+        t += rng.exponential(1.0 / args.rate)
+        prompt = [int(x) for x in
+                  rng.integers(0, cfg.vocab_size, int(rng.integers(4, 24)))]
+        eng.submit(Request(rid=i, prompt=prompt,
+                           max_new_tokens=args.max_new_tokens, arrival=t))
+    eng.run_until_drained()
+    print(f"served {len(eng.finished)} requests, "
+          f"sim clock {eng.clock*1e3:.2f} ms, metrics {eng.metrics}")
+    for r in eng.finished[:4]:
+        print(f"  rid={r.rid} ttft={r.ttft*1e3:.2f}ms "
+              f"tokens={r.output[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Step functions (train / prefill / decode) + their shardings + input specs.
+
+``build(cfg, shape, mesh, multi_pod)`` returns everything ``dryrun.py`` (and
+the real launchers) need: the jit-able step function, in/out shardings, and
+ShapeDtypeStruct stand-ins for every input — weak-type-correct, shardable,
+no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.distributed.sharding import axis_rules, make_rules
+from repro.launch.partition import (MODEL_AXIS_SIZE, batch_axes, batch_pspecs,
+                                    cache_pspecs, dim_axis, moe_expert_axes,
+                                    param_pspecs, to_named)
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training.optimizer import adamw_init, adamw_update
+
+
+def moment_dtype(cfg: ModelConfig) -> jnp.dtype:
+    """bf16 Adam moments for >=100B-param models (DESIGN §5)."""
+    big = cfg.profile().total_params() >= 1e11
+    return jnp.bfloat16 if big else jnp.float32
+
+
+def num_microbatches(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    if shape.step != "train":
+        return 1
+    if cfg.d_model >= 6144:
+        return 16
+    if cfg.d_model >= 3072:
+        return 8
+    return 2
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    i32 = jnp.int32
+    if cfg.frontend == "audio_stub":
+        return {"frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.dtype(cfg.dtype)),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+    if cfg.frontend == "vision_stub":
+        pe = cfg.n_prefix_embeds
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq - pe), i32),
+                "image_embeds": jax.ShapeDtypeStruct(
+                    (batch, pe, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "labels": jax.ShapeDtypeStruct((batch, seq - pe), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+
+
+def shaped(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """All abstract inputs for the given (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    params = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    out: Dict[str, Any] = {"params": params}
+    if shape.step == "train":
+        out["opt_state"] = jax.eval_shape(
+            functools.partial(adamw_init, moment_dtype=moment_dtype(cfg)),
+            params)
+        out["batch"] = batch_struct(cfg, B, S)
+    elif shape.step == "prefill":
+        b = batch_struct(cfg, B, S)
+        b.pop("labels", None)
+        out["batch"] = b
+    else:  # decode
+        out["cache"] = jax.eval_shape(
+            lambda: T.init_cache(cfg, B, S))
+        out["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    args: Tuple           # ShapeDtypeStructs, positional
+    donate_argnums: Tuple[int, ...]
+    static_desc: str
+
+
+def build(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, multi_pod: bool
+          ) -> StepBundle:
+    rules = make_rules(mesh, kv_head_split=cfg.kv_heads_shardable(
+        MODEL_AXIS_SIZE), multi_pod=multi_pod,
+        expert_axes=moe_expert_axes(cfg, multi_pod))
+    specs = input_specs(cfg, shape)
+    params_shape = specs["params"]
+    p_specs = param_pspecs(cfg, params_shape, multi_pod)
+    fsdp = batch_axes(multi_pod)
+
+    if shape.step == "train":
+        n_micro = num_microbatches(cfg, shape)
+        opt_specs = {"m": p_specs, "v": p_specs, "step": P()}
+        b_specs = batch_pspecs(cfg, specs["batch"], multi_pod)
+
+        def train_step(params, opt_state, batch):
+            with axis_rules(rules):
+                def micro_loss(p, mb):
+                    loss, met = T.loss_fn(cfg, p, mb)
+                    return loss, met
+
+                grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+                def split_micro(x):
+                    b = x.shape[0]
+                    return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+                micro = jax.tree.map(split_micro, batch)
+
+                def acc_body(carry, mb):
+                    g_acc, l_acc = carry
+                    (loss, met), g = grad_fn(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b_: a + b_.astype(a.dtype), g_acc, g)
+                    return (g_acc, l_acc + loss), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss_sum), _ = jax.lax.scan(
+                    acc_body, (g0, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+                new_params, new_opt, gnorm = adamw_update(
+                    params, grads, opt_state)
+                metrics = {"loss": loss_sum / n_micro, "grad_norm": gnorm}
+                return new_params, new_opt, metrics
+
+        return StepBundle(
+            fn=train_step,
+            in_shardings=(p_specs, opt_specs, b_specs),
+            out_shardings=(p_specs, opt_specs, P()),
+            args=(params_shape, specs["opt_state"], specs["batch"]),
+            donate_argnums=(0, 1),
+            static_desc=f"train n_micro={n_micro}",
+        )
+
+    if shape.step == "prefill":
+        b_specs = batch_pspecs(cfg, specs["batch"], multi_pod)
+        max_seq = shape.seq_len  # cache sized to the prompt for the dry-run
+        cache_shape = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.global_batch, max_seq))
+        c_specs = cache_pspecs(cfg, cache_shape, multi_pod)
+
+        B = shape.global_batch
+        bspec = dim_axis(B, fsdp, multi_pod)
+        vspec = dim_axis(cfg.vocab_size, "model", multi_pod)
+
+        if cfg.is_encoder_only:
+            def prefill_step(params, batch):
+                with axis_rules(rules):
+                    h, _ = T.forward_hidden(cfg, params, batch, remat=False)
+                    head = params["lm_head"]
+                    # encoder emits frame logits for the last frame only as a
+                    # compact output (full logits are huge at 32k)
+                    return (h[:, -1] @ head).astype(jnp.float32)
+
+            return StepBundle(
+                fn=prefill_step,
+                in_shardings=(p_specs, b_specs),
+                out_shardings=P(bspec, vspec),
+                args=(params_shape, specs["batch"]),
+                donate_argnums=(),
+                static_desc="prefill(encoder)",
+            )
+
+        def prefill_step(params, batch):
+            with axis_rules(rules):
+                logits, cache = T.prefill(cfg, params, batch, max_seq=max_seq)
+                return logits, cache
+
+        return StepBundle(
+            fn=prefill_step,
+            in_shardings=(p_specs, b_specs),
+            out_shardings=(P(bspec, vspec), c_specs),
+            args=(params_shape, specs["batch"]),
+            donate_argnums=(),
+            static_desc="prefill",
+        )
+
+    # decode
+    c_specs = cache_pspecs(cfg, specs["cache"], multi_pod)
+    bspec = dim_axis(shape.global_batch, fsdp, multi_pod)
+
+    def serve_step(params, cache, tokens):
+        with axis_rules(rules):
+            logits, new_cache = T.decode_step(cfg, params, cache, tokens)
+            new_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return new_tokens[:, None], new_cache
+
+    return StepBundle(
+        fn=serve_step,
+        in_shardings=(p_specs, c_specs, P(bspec, None)),
+        out_shardings=(P(bspec, None), c_specs),
+        args=(params_shape, specs["cache"], specs["tokens"]),
+        donate_argnums=(1,),
+        static_desc="decode",
+    )

@@ -1,0 +1,42 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 50 --ckpt /tmp/ckpt
+
+``--smoke`` trains the reduced config on CPU (the end-to-end driver);
+without it, the production path lowers the full train_4k cell on the
+dry-run mesh (see repro.launch.dryrun for the compile-only variant).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import smoke_config
+from repro.training.data import DataConfig
+from repro.training.train_loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    out = train(cfg, dcfg, TrainConfig(steps=args.steps, lr=args.lr,
+                                       ckpt_dir=args.ckpt))
+    losses = out["losses"]
+    print(f"steps={len(losses)} first_loss={losses[0]:.4f} "
+          f"last_loss={losses[-1]:.4f} events={out['events']}")
+    assert losses[-1] < losses[0], "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

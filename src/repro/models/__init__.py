@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models.transformer import (backbone, decode_step, embed_inputs,
+                                      forward_hidden, init_cache, init_params,
+                                      layer_groups, loss_fn, prefill)

@@ -1,0 +1,212 @@
+"""Shared model building blocks: norms, RoPE, initializers, chunked attention.
+
+All functions are pure; parameters are plain pytrees of jnp arrays.  Compute
+follows the usual mixed-precision discipline: matmuls in the config dtype
+(bf16 on the TPU target), softmax / norm statistics in fp32.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+
+
+def cdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_shape, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (std = 1/sqrt(in_dim))."""
+    shape = (in_dim,) + tuple(out_shape if isinstance(out_shape, tuple)
+                              else (out_shape,))
+    std = 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window,
+               kv_len: Optional[jax.Array]) -> jax.Array:
+    """Additive mask bias of shape (..., Sq, Sk) from position vectors.
+
+    ``window`` may be a python int or a traced scalar (hymba mixes global and
+    sliding-window layers inside one scanned group); <=0 disables it.
+    """
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    w = jnp.asarray(window)
+    ok &= jnp.where(w > 0, (q_pos[:, None] - k_pos[None, :]) < w, True)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    if kv_len is not None:
+        # kv_len: (B,) valid cache lengths -> shape (B, 1, Sq, Sk)
+        valid = k_pos[None, :] < kv_len[:, None]
+        bias = bias[None, None, :, :] + jnp.where(
+            valid, 0.0, NEG_INF).astype(jnp.float32)[:, None, None, :]
+    return bias
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
+                   bias: jax.Array, scale: float) -> jax.Array:
+    """q: (B,Sq,Hq,dh) k,v: (B,Sk,Hkv,dh/dv); bias broadcast to
+    (B,Hkv,r,Sq,Sk).  GQA handled by folding Hq = Hkv * r."""
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    r = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, r, dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + bias
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    w = w.astype(v.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w, v)
+    return out.reshape(B, Sq, Hq, v.shape[-1])
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window=0,
+                      q_offset: int = 0, chunk: int = 1024,
+                      kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Full attention evaluated in query chunks (bounds the score tensor to
+    (B, Hkv, r, chunk, Sk) — required for 32k prefill; see DESIGN §5).
+
+    q: (B, Sq, Hq, dh); k, v: (B, Sk, Hkv, d*).  ``q_offset`` is the absolute
+    position of q[:, 0].
+    """
+    B, Sq, Hq, dh = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    k_pos = jnp.arange(Sk)
+
+    if Sq <= chunk:
+        q_pos = q_offset + jnp.arange(Sq)
+        bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                          kv_len=kv_len)
+        if bias.ndim == 2:
+            bias = bias[None, None, None]
+        else:  # (B, 1, Sq, Sk) -> (B, 1, 1, Sq, Sk)
+            bias = bias[:, :, None]
+        return attention_core(q, k, v, bias, scale)
+
+    n_chunks = -(-Sq // chunk)
+    pad = n_chunks * chunk - Sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = qp.reshape(B, n_chunks, chunk, Hq, dh).transpose(1, 0, 2, 3, 4)
+
+    # §Perf(hymba prefill): when a STATIC sliding window is set, each query
+    # chunk only touches keys in [q_lo - window + 1, q_hi] — slice K/V to a
+    # (window + chunk)-wide strip instead of masking the full sequence.
+    # Cuts SWA-layer attention FLOPs/bytes by ~S/(window+chunk).
+    static_window = isinstance(window, int) and 0 < window < Sk
+
+    if static_window:
+        strip = window + chunk            # keys a chunk can ever see
+        kp = jnp.pad(k, ((0, 0), (strip - chunk, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (strip - chunk, 0), (0, 0), (0, 0)))
+
+        def body(i, qc):
+            q_lo = i * chunk
+            # padded coordinates: true key j lives at j + strip - chunk
+            ks = jax.lax.dynamic_slice_in_dim(kp, q_lo, strip, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, q_lo, strip, axis=1)
+            q_pos = q_offset + q_lo + jnp.arange(chunk)
+            k_pos_s = q_offset + q_lo - (strip - chunk) + jnp.arange(strip)
+            ok = jnp.ones((chunk, strip), dtype=bool)
+            if causal:
+                ok &= q_pos[:, None] >= k_pos_s[None, :]
+            ok &= (q_pos[:, None] - k_pos_s[None, :]) < window
+            ok &= k_pos_s[None, :] >= 0          # left padding
+            if kv_len is not None:
+                ok = ok[None] & (k_pos_s[None, None, :] < kv_len[:, None,
+                                                                 None])
+            bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+            bias = bias[None, None, None] if bias.ndim == 2 \
+                else bias[:, None, None]
+            return attention_core(qc, ks, vs, bias, scale)
+    else:
+        def body(i, qc):
+            q_pos = q_offset + i * chunk + jnp.arange(chunk)
+            bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                              kv_len=kv_len)
+            if bias.ndim == 2:
+                bias = bias[None, None, None]
+            else:
+                bias = bias[:, :, None]
+            return attention_core(qc, k, v, bias, scale)
+
+    out = jax.lax.map(lambda args: body(*args),
+                      (jnp.arange(n_chunks), qs))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, Hq, -1)
+    return out[:, :Sq]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, window=0) -> jax.Array:
+    """One-token decode: q (B,1,Hq,dh); caches (B,S,Hkv,d*); kv_len (B,).
+
+    Masks positions >= kv_len (and < kv_len - window for SWA); ``window``
+    may be a traced scalar (<=0 disables).
+    """
+    B, S = k_cache.shape[0], k_cache.shape[1]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    k_pos = jnp.arange(S)
+    valid = k_pos[None, :] < kv_len[:, None]
+    w = jnp.asarray(window)
+    valid &= jnp.where(w > 0, k_pos[None, :] >= (kv_len[:, None] - w), True)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias[:, None, None, None, :]   # (B,1,1,1,S)
+    return attention_core(q, k_cache, v_cache, bias, scale)

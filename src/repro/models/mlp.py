@@ -1,0 +1,149 @@
+"""Dense MLP (SwiGLU / GELU) and Mixture-of-Experts FFN.
+
+MoE uses capacity-based token dispatch with a *sort-based* position-in-expert
+computation (O(N log N), no (tokens x experts) one-hot materialization) and a
+scatter into an (experts, capacity, d) buffer, then batched expert einsums —
+the TPU-native dispatch that XLA turns into all-to-alls when experts are
+sharded over the ``model`` axis (DESIGN §5).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+from repro.models.common import cdtype, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg, key, d_ff: int = 0) -> Dict:
+    dt = cdtype(cfg)
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d, (ff,), dt),
+         "wo": dense_init(ks[1], ff, (d,), dt)}
+    if cfg.act == "swiglu":
+        p["wg"] = dense_init(ks[2], d, (ff,), dt)
+    return p
+
+
+def mlp_apply(cfg, p, x) -> jax.Array:
+    h = x @ p["wi"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = logical(h, "batch", "seq", "mlp")
+    return logical(h @ p["wo"], "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_init(cfg, key) -> Dict:
+    dt = cdtype(cfg)
+    d, E = cfg.d_model, cfg.n_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, (E,), jnp.float32),
+        "wi": (jax.random.truncated_normal(ks[1], -2, 2, (E, d, ff),
+                                           jnp.float32) / jnp.sqrt(d)).astype(dt),
+        "wo": (jax.random.truncated_normal(ks[2], -2, 2, (E, ff, d),
+                                           jnp.float32) / jnp.sqrt(ff)).astype(dt),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = (jax.random.truncated_normal(ks[3], -2, 2, (E, d, ff),
+                                               jnp.float32)
+                   / jnp.sqrt(d)).astype(dt)
+    if cfg.n_shared_experts:
+        # shared experts folded into one dense MLP of combined width
+        import dataclasses
+        p["shared"] = mlp_init(cfg, ks[4],
+                               d_ff=ff * cfg.n_shared_experts)
+    return p
+
+
+def _position_in_expert(flat_e: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each assignment within its expert, via sort (no TxE one-hot)."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    ranks = jnp.arange(n, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    return jnp.zeros((n,), jnp.int32).at[order].set(ranks)
+
+
+def moe_apply(cfg, p, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d).  Returns (out, aux_load_balance_loss)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    # NOTE (§Perf deepseek train, iterations 1-2, both REFUTED): forcing
+    # token shardings through the dispatch chain added 7 TB of all-to-alls
+    # without removing the (N, d) combine all-reduce, and full-EP expert
+    # sharding turned the scatter/gather dispatch into per-microbatch
+    # buffer all-gathers (2.9x worse).  The structural fix is an explicit
+    # shard_map ragged-EP dispatch (send each assignment to its expert
+    # owner once, psum the (T, d) partial combine) — see EXPERIMENTS §Perf.
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = jax.lax.top_k(probs, K)          # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+    density = jnp.mean(jax.nn.one_hot(topk_idx[:, 0], E), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_prob)
+
+    N = T * K
+    flat_e = topk_idx.reshape(N)
+    pos = _position_in_expert(flat_e, E)
+    # capacity: per-expert load can never exceed T (top-k experts are
+    # distinct per token), so cap = T for T <= 64 is exactly dropless —
+    # decode steps and smoke tests stay bit-consistent with the full
+    # forward.  Larger passes use the cf-scaled mean load (Switch-style,
+    # drops possible) with a floor of 8 to bound tail drops at decode.
+    if T <= 64:
+        cap = T
+    else:
+        cap = max(int(T * K / E * cfg.capacity_factor), 8)
+    keep = pos < cap
+
+    x_rep = jnp.repeat(xt, K, axis=0)                      # (N, d) token-major
+    x_rep = x_rep * keep[:, None].astype(xt.dtype)
+    safe_pos = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((E, cap, d), xt.dtype)
+    buf = buf.at[flat_e, safe_pos].add(
+        jnp.where(keep[:, None], x_rep, 0))
+    buf = logical(buf, "experts", None, "embed")
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    # experts already claim the model axis; the ff dim stays local
+    h = logical(h, "experts", None, "expert_mlp")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out_buf = logical(out_buf, "experts", None, "embed")
+
+    gathered = out_buf[flat_e, safe_pos]                   # (N, d)
+    gathered = gathered * (gate_vals.reshape(N, 1).astype(xt.dtype)
+                           * keep[:, None].astype(xt.dtype))
+    out = jnp.sum(gathered.reshape(T, K, d), axis=1)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(cfg, p["shared"], xt[None])[0]
+    return logical(out.reshape(B, S, d), "batch", "seq", "embed"), aux

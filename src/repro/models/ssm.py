@@ -1,0 +1,151 @@
+"""Mamba-style selective SSM block (the SSM path of hymba's hybrid heads).
+
+Training/prefill runs the recurrence chunked: an outer lax.scan over sequence
+chunks carries the (B, d_inner, n) state; the inner per-chunk scan is wrapped
+in jax.checkpoint so the backward pass recomputes inside the chunk instead of
+saving 4k per-step carries (DESIGN §5; a chunkwise-parallel SSD form is a
+§Perf candidate).  Decode is a single recurrence step with a carried
+(conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+from repro.models.common import cdtype, dense_init
+
+
+def ssm_init(cfg, key) -> Dict:
+    dt = cdtype(cfg)
+    d, di, n, r, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_dt_rank, cfg.ssm_conv)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A
+    a_init = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                              (di, n))
+    return {
+        "in_proj": dense_init(ks[0], d, (2 * di,), dt),
+        "conv_w": (jax.random.normal(ks[1], (di, k), jnp.float32)
+                   / jnp.sqrt(k)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, (r + 2 * n,), dt),
+        "dt_proj": dense_init(ks[3], r, (di,), dt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, (d,), dt),
+    }
+
+
+def ssm_cache_init(cfg, batch: int) -> Dict:
+    dt = cdtype(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_inner, cfg.ssm_conv - 1), dt),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def _ssm_inputs(cfg, p, x_conv):
+    """From the post-conv activation compute (dt, Bmat, Cmat)."""
+    n, r = cfg.ssm_state, cfg.ssm_dt_rank
+    dbc = x_conv @ p["x_proj"]
+    dt_lowrank, Bm, Cm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_lowrank @ p["dt_proj"]
+                         + p["dt_bias"].astype(dbc.dtype))
+    return dt, Bm, Cm
+
+
+def _scan_chunk(carry, xs, A):
+    """Inner recurrence over one chunk.  carry: h (B, di, n) fp32."""
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp   # (B,di), (B,di), (B,n), (B,n)
+        dA = jnp.exp(dt_t.astype(jnp.float32)[..., None] * A)   # (B,di,n)
+        dBx = (dt_t * x_t).astype(jnp.float32)[..., None] \
+            * B_t.astype(jnp.float32)[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    return jax.lax.scan(step, carry, xs)
+
+
+def ssm_forward(cfg, p, x) -> Tuple[jax.Array, Dict]:
+    """Full-sequence selective scan.  x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    u = x @ p["in_proj"]
+    x_in, z = jnp.split(u, 2, axis=-1)
+    x_in = logical(x_in, "batch", "seq", "ssm_inner")
+
+    # causal depthwise conv over seq
+    xc = jnp.pad(x_in, ((0, 0), (k - 1, 0), (0, 0)))
+    x_conv = jax.lax.conv_general_dilated(
+        xc, p["conv_w"][:, None, :].astype(xc.dtype).transpose(2, 1, 0),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=di)
+    x_conv = jax.nn.silu(x_conv + p["conv_b"].astype(x_conv.dtype))
+
+    dt, Bm, Cm = _ssm_inputs(cfg, p, x_conv)
+    A = -jnp.exp(p["A_log"])                                   # (di, n)
+
+    chunk = min(cfg.ssm_chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+
+    def pad_split(t):
+        t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        return (t.reshape(B, n_chunks, chunk, *t.shape[2:])
+                .transpose(1, 2, 0, *range(3, t.ndim + 1)))
+
+    xs = (pad_split(x_conv), pad_split(dt), pad_split(Bm), pad_split(Cm))
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+
+    inner = jax.checkpoint(lambda c, s: _scan_chunk(c, s, A))
+
+    def outer(h, chunk_xs):
+        h, y = inner(h, chunk_xs)
+        return h, y
+
+    h_final, ys = jax.lax.scan(outer, h0, xs)                  # ys: (nc,ch,B,di)
+    y = ys.transpose(2, 0, 1, 3).reshape(B, n_chunks * chunk, di)[:, :S]
+    y = y.astype(x.dtype) + x_conv * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return logical(out, "batch", "seq", "embed"), {
+        "conv": x_in[:, -(k - 1):].transpose(0, 2, 1) if S >= k - 1 else
+        jnp.pad(x_in, ((0, 0), (k - 1 - S, 0), (0, 0))).transpose(0, 2, 1),
+        "ssm": h_final,
+    }
+
+
+def ssm_decode(cfg, p, x, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Single-token step.  x: (B, 1, d)."""
+    B = x.shape[0]
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    u = x[:, 0] @ p["in_proj"]
+    x_in, z = jnp.split(u, 2, axis=-1)                         # (B, di)
+
+    conv_buf = jnp.concatenate([cache["conv"], x_in[:, :, None]], axis=-1)
+    x_conv = jnp.einsum("bdk,dk->bd", conv_buf.astype(jnp.float32),
+                        p["conv_w"].astype(jnp.float32))
+    x_conv = jax.nn.silu(x_conv + p["conv_b"].astype(jnp.float32)
+                         ).astype(x.dtype)
+
+    dt, Bm, Cm = _ssm_inputs(cfg, p, x_conv)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+    dBx = (dt * x_conv).astype(jnp.float32)[..., None] \
+        * Bm.astype(jnp.float32)[:, None, :]
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + x_conv * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :]
+    return logical(out, "batch", "seq", "embed"), {
+        "conv": conv_buf[:, :, 1:], "ssm": h}

@@ -1,0 +1,463 @@
+"""Model assembly: layer groups, scan-over-layers, prefill/decode/train.
+
+A config is compiled into an ordered list of homogeneous **layer groups**
+(e.g. deepseek-v3 = 3 dense layers then 58 MoE layers; xlstm = 12
+(mLSTM,sLSTM) pairs; hymba = 32 hybrid layers with a per-layer window flag).
+Each group is initialized with stacked parameters (leading layer axis) and
+executed with ``lax.scan`` so HLO size is depth-independent — essential for
+the 61-layer/256-expert dry-runs (DESIGN §5).
+
+Caches: ``{"groups": [per-group pytree with leading (n_layers, B, ...)],
+"pos": (B,) int32}``.  Decode scans each group with its cache slice as scan
+xs and emits the updated slice as ys.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import cdtype, dense_init, embed_init, rmsnorm
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Group layout
+# ---------------------------------------------------------------------------
+
+def layer_groups(cfg: ModelConfig) -> List[Tuple[str, int, int]]:
+    """Ordered (kind, n_layers, window) list; each group is scanned
+    homogeneously with a STATIC attention window (0 = full) so windowed
+    groups can use the sliced-strip attention path (§Perf hymba)."""
+    if cfg.xlstm_pattern:
+        period = len(cfg.xlstm_pattern)
+        assert cfg.n_layers % period == 0, "xlstm pattern must tile layers"
+        return [("xlstm_pair", cfg.n_layers // period, 0)]
+    if cfg.attn_type == "none":
+        raise ValueError("attention-free non-xlstm archs not supported")
+
+    def window_of(i: int) -> int:
+        if not cfg.sliding_window or i in cfg.global_layers:
+            return 0
+        return cfg.sliding_window
+
+    def kind_of(i: int) -> str:
+        if cfg.ssm_state and cfg.attn_type == "gqa":
+            return "hybrid"
+        a = cfg.attn_type
+        if cfg.n_experts and i >= cfg.first_dense_layers:
+            return f"{a}_moe"
+        return f"{a}_mlp"
+
+    out: List[Tuple[str, int, int]] = []
+    for i in range(cfg.n_layers):
+        k, w = kind_of(i), window_of(i)
+        if out and out[-1][0] == k and out[-1][2] == w:
+            out[-1] = (k, out[-1][1] + 1, w)
+        else:
+            out.append((k, 1, w))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply by kind
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, kind: str, key) -> Params:
+    dt = cdtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    if kind == "xlstm_pair":
+        p["m_norm"] = jnp.ones((d,), jnp.float32)
+        p["mlstm"] = xlstm_mod.mlstm_init(cfg, ks[0])
+        p["s_norm"] = jnp.ones((d,), jnp.float32)
+        p["slstm"] = xlstm_mod.slstm_init(cfg, ks[1])
+        return p
+    p["attn_norm"] = jnp.ones((d,), jnp.float32)
+    if kind.startswith("mla"):
+        p["attn"] = attn.mla_init(cfg, ks[0])
+    else:
+        p["attn"] = attn.gqa_init(cfg, ks[0])
+    if kind == "hybrid":
+        p["ssm"] = ssm_mod.ssm_init(cfg, ks[1])
+        p["attn_out_norm"] = jnp.ones((d,), jnp.float32)
+        p["ssm_out_norm"] = jnp.ones((d,), jnp.float32)
+    p["mlp_norm"] = jnp.ones((d,), jnp.float32)
+    if kind.endswith("moe"):
+        p["mlp"] = mlp_mod.moe_init(cfg, ks[2])
+    elif kind == "hybrid" and cfg.d_ff:
+        p["mlp"] = mlp_mod.mlp_init(cfg, ks[2])
+    elif cfg.d_ff:
+        p["mlp"] = mlp_mod.mlp_init(cfg, ks[2])
+    return p
+
+
+def _layer_cache_init(cfg: ModelConfig, kind: str, batch: int, max_seq: int
+                      ) -> Cache:
+    if kind == "xlstm_pair":
+        return {"m": xlstm_mod.mlstm_cache_init(cfg, batch),
+                "s": xlstm_mod.slstm_cache_init(cfg, batch)}
+    if kind.startswith("mla"):
+        c: Cache = attn.mla_cache_init(cfg, batch, max_seq)
+    else:
+        c = attn.gqa_cache_init(cfg, batch, max_seq)
+    if kind == "hybrid":
+        c.update(ssm_mod.ssm_cache_init(cfg, batch))
+    return c
+
+
+def _apply_full(cfg: ModelConfig, kind: str, p: Params, x, positions, window
+                ) -> Tuple[jax.Array, Cache, jax.Array]:
+    """Train/prefill body for one layer.  Returns (x, cache_entries, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "xlstm_pair":
+        h, m_cache = xlstm_mod.mlstm_forward(
+            cfg, p["mlstm"], rmsnorm(x, p["m_norm"], cfg.norm_eps))
+        x = x + h
+        h, s_cache = xlstm_mod.slstm_forward(
+            cfg, p["slstm"], rmsnorm(x, p["s_norm"], cfg.norm_eps))
+        x = x + h
+        return x, {"m": m_cache, "s": s_cache}, aux
+
+    xn = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    if kind.startswith("mla"):
+        a_out, cache = attn.mla_full(cfg, p["attn"], xn, positions, window)
+    else:
+        a_out, cache = attn.gqa_full(cfg, p["attn"], xn, positions, window)
+    if kind == "hybrid":
+        s_out, s_cache = ssm_mod.ssm_forward(cfg, p["ssm"], xn)
+        a_out = 0.5 * (rmsnorm(a_out, p["attn_out_norm"], cfg.norm_eps)
+                       + rmsnorm(s_out, p["ssm_out_norm"], cfg.norm_eps))
+        cache.update(s_cache)
+    x = x + a_out
+    if "mlp" in p:
+        xn = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+        if kind.endswith("moe"):
+            m_out, aux = mlp_mod.moe_apply(cfg, p["mlp"], xn)
+        else:
+            m_out = mlp_mod.mlp_apply(cfg, p["mlp"], xn)
+        x = x + m_out
+    return x, cache, aux
+
+
+def _apply_decode(cfg: ModelConfig, kind: str, p: Params, cache: Cache, x,
+                  pos, window) -> Tuple[jax.Array, Cache]:
+    if kind == "xlstm_pair":
+        h, m_cache = xlstm_mod.mlstm_decode(
+            cfg, p["mlstm"], rmsnorm(x, p["m_norm"], cfg.norm_eps),
+            cache["m"])
+        x = x + h
+        h, s_cache = xlstm_mod.slstm_decode(
+            cfg, p["slstm"], rmsnorm(x, p["s_norm"], cfg.norm_eps),
+            cache["s"])
+        x = x + h
+        return x, {"m": m_cache, "s": s_cache}
+
+    xn = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    if kind.startswith("mla"):
+        a_out, new_cache = attn.mla_decode(cfg, p["attn"], xn, cache, pos,
+                                           window)
+    else:
+        a_out, new_cache = attn.gqa_decode(
+            cfg, p["attn"], xn,
+            {"k": cache["k"], "v": cache["v"]}, pos, window)
+    if kind == "hybrid":
+        s_out, s_cache = ssm_mod.ssm_decode(
+            cfg, p["ssm"], xn, {"conv": cache["conv"], "ssm": cache["ssm"]})
+        a_out = 0.5 * (rmsnorm(a_out, p["attn_out_norm"], cfg.norm_eps)
+                       + rmsnorm(s_out, p["ssm_out_norm"], cfg.norm_eps))
+        new_cache.update(s_cache)
+    x = x + a_out
+    if "mlp" in p:
+        xn = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+        if kind.endswith("moe"):
+            m_out, _ = mlp_mod.moe_apply(cfg, p["mlp"], xn)
+        else:
+            m_out = mlp_mod.mlp_apply(cfg, p["mlp"], xn)
+        x = x + m_out
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = cdtype(cfg)
+    groups = layer_groups(cfg)
+    keys = jax.random.split(key, len(groups) + 4)
+    params: Params = {"groups": []}
+    for gi, (kind, n, _win) in enumerate(groups):
+        gkeys = jax.random.split(keys[gi], n)
+        stacked = jax.vmap(lambda k: _layer_init(cfg, kind, k))(gkeys)
+        params["groups"].append(stacked)
+    if cfg.frontend == "audio_stub":
+        params["in_proj"] = dense_init(keys[-4], cfg.d_model, (cfg.d_model,),
+                                       dt)
+        if cfg.max_pos_embed:
+            params["pos_embed"] = (jax.random.normal(
+                keys[-1], (cfg.max_pos_embed, cfg.d_model), jnp.float32)
+                * 0.02).astype(dt)
+    else:
+        params["embed"] = embed_init(keys[-1], cfg.vocab_size, cfg.d_model, dt)
+        if cfg.frontend == "vision_stub":
+            params["img_proj"] = dense_init(keys[-3], cfg.d_model,
+                                            (cfg.d_model,), dt)
+    params["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-2], cfg.d_model,
+                                       (cfg.vocab_size,), dt)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Cache:
+    caches = []
+    for kind, n, _win in layer_groups(cfg):
+        one = lambda _: _layer_cache_init(cfg, kind, batch, max_seq)
+        caches.append(jax.vmap(one)(jnp.arange(n)))
+    return {"groups": caches, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Frontends
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params: Params, batch: Dict) -> jax.Array:
+    """Turn raw model inputs into the (B, S, d) hidden-state stream."""
+    dt = cdtype(cfg)
+    if cfg.frontend == "audio_stub":
+        x = batch["frames"].astype(dt) @ params["in_proj"]
+        if cfg.max_pos_embed:
+            x = x + params["pos_embed"][None, :x.shape[1]]
+    elif cfg.frontend == "vision_stub":
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        img = batch["image_embeds"].astype(dt) @ params["img_proj"]
+        x = jnp.concatenate([img, tok], axis=1)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return logical(x, "batch", "seq", "embed")
+
+
+def _lm_head(cfg: ModelConfig, params: Params) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def backbone(cfg: ModelConfig, params: Params, x: jax.Array,
+             positions: jax.Array, *, want_cache: bool, remat: bool
+             ) -> Tuple[jax.Array, Optional[List], jax.Array]:
+    """Run all layer groups; optionally collect prefill caches."""
+    groups = layer_groups(cfg)
+    caches: List = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, (kind, n, win) in enumerate(groups):
+
+        def body(carry, p_l, _kind=kind, _win=win):
+            xx, aux = carry
+            xx, cache_l, a = _apply_full(cfg, _kind, p_l, xx, positions,
+                                         _win)
+            out = cache_l if want_cache else None
+            return (xx, aux + a), out
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total),
+                                          params["groups"][gi])
+        if want_cache:
+            caches.append(ys)
+    return x, (caches if want_cache else None), aux_total
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, batch: Dict,
+                   remat: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """(B,S,d) final hidden states + MoE aux loss (training path)."""
+    x = embed_inputs(cfg, params, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x, _, aux = backbone(cfg, params, x, positions, want_cache=False,
+                         remat=cfg.remat if remat is None else remat)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict
+            ) -> Tuple[jax.Array, Dict]:
+    """Chunked causal-LM (or frame-classification) cross-entropy."""
+    h, aux = forward_hidden(cfg, params, batch)
+    labels = batch["labels"]                       # (B, S_out) int32, -1 = pad
+    B, S, d = h.shape
+    if labels.shape[1] != S:                       # vlm: labels only for text
+        h = h[:, S - labels.shape[1]:]
+        S = labels.shape[1]
+    head = _lm_head(cfg, params)
+
+    chunk = min(cfg.loss_chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hs = hp.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    ls = lp.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        hc, lc = inp
+        logits = (hc @ head).astype(jnp.float32)
+        logits = logical(logits, "batch", "seq", "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        nll = (logz - tgt) * mask
+        total, count = carry
+        return (total + nll.sum(), count + mask.sum()), None
+
+    (total, count), _ = jax.lax.scan(chunk_loss,
+                                     (jnp.zeros((), jnp.float32),
+                                      jnp.zeros((), jnp.float32)),
+                                     (hs, ls))
+    loss = total / jnp.maximum(count, 1.0) + 0.01 * aux
+    return loss, {"nll": total / jnp.maximum(count, 1.0), "aux": aux,
+                  "tokens": count}
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict, max_seq: int,
+            lengths: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Cache]:
+    """Process the full prompt; returns (last-token logits, cache).
+
+    The cache is padded/written for positions [0, S); ``max_seq`` reserves
+    extra slots for decode.  ``lengths`` (B,) marks true prompt lengths
+    (right-padded batches).
+    """
+    x = embed_inputs(cfg, params, batch)
+    B, S, d = x.shape
+    positions = jnp.arange(S)[None, :]
+    x, caches, _ = backbone(cfg, params, x, positions, want_cache=True,
+                            remat=False)
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    last = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
+    logits = (last[:, 0] @ _lm_head(cfg, params)).astype(jnp.float32)
+
+    # grow caches to max_seq along the kv-seq axis
+    grown = []
+    for (kind, n, _win), c in zip(layer_groups(cfg), caches):
+        c = dict(c)
+        for key in ("k", "v", "ckv", "krope"):
+            if key in c:
+                cur = c[key]          # (L, B, S, ...) -> pad S up to max_seq
+                c[key] = jnp.pad(cur, ((0, 0), (0, 0), (0, max_seq - S))
+                                 + ((0, 0),) * (cur.ndim - 3))
+        grown.append(c)
+    return logits, {"groups": grown, "pos": lengths.astype(jnp.int32)}
+
+
+def _apply_decode_carry(cfg: ModelConfig, kind: str, p: Params,
+                        caches: Cache, idx, x, pos, window
+                        ) -> Tuple[jax.Array, Cache]:
+    """Decode one layer against the group's FULL stacked caches, updating
+    in place via scatter at (idx, b, pos_b) — see gqa_decode_carry."""
+    caches = dict(caches)
+    if kind == "xlstm_pair":
+        h, m_cache = xlstm_mod.mlstm_decode(
+            cfg, p["mlstm"], rmsnorm(x, p["m_norm"], cfg.norm_eps),
+            jax.tree.map(lambda c: c[idx], caches["m"]))
+        x = x + h
+        h, s_cache = xlstm_mod.slstm_decode(
+            cfg, p["slstm"], rmsnorm(x, p["s_norm"], cfg.norm_eps),
+            jax.tree.map(lambda c: c[idx], caches["s"]))
+        x = x + h
+        caches["m"] = jax.tree.map(lambda full, new: full.at[idx].set(new),
+                                   caches["m"], m_cache)
+        caches["s"] = jax.tree.map(lambda full, new: full.at[idx].set(new),
+                                   caches["s"], s_cache)
+        return x, caches
+
+    xn = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    if kind.startswith("mla"):
+        a_out, caches["ckv"], caches["krope"] = attn.mla_decode_carry(
+            cfg, p["attn"], xn, caches["ckv"], caches["krope"], idx, pos,
+            window)
+    else:
+        a_out, caches["k"], caches["v"] = attn.gqa_decode_carry(
+            cfg, p["attn"], xn, caches["k"], caches["v"], idx, pos, window)
+    if kind == "hybrid":
+        s_out, s_cache = ssm_mod.ssm_decode(
+            cfg, p["ssm"], xn,
+            {"conv": caches["conv"][idx], "ssm": caches["ssm"][idx]})
+        a_out = 0.5 * (rmsnorm(a_out, p["attn_out_norm"], cfg.norm_eps)
+                       + rmsnorm(s_out, p["ssm_out_norm"], cfg.norm_eps))
+        caches["conv"] = caches["conv"].at[idx].set(s_cache["conv"])
+        caches["ssm"] = caches["ssm"].at[idx].set(s_cache["ssm"])
+    x = x + a_out
+    if "mlp" in p:
+        xn = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+        if kind.endswith("moe"):
+            m_out, _ = mlp_mod.moe_apply(cfg, p["mlp"], xn)
+        else:
+            m_out = mlp_mod.mlp_apply(cfg, p["mlp"], xn)
+        x = x + m_out
+    return x, caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                tokens: jax.Array) -> Tuple[jax.Array, Cache]:
+    """One decode step for all sequences.  tokens: (B, 1) int32.
+
+    ``cfg.decode_impl`` selects the cache-update strategy:
+      "carry"   — full stacked caches carried through the scan, token
+                  scatter in place (no per-step cache copy);
+      "stacked" — caches as scan xs/ys (baseline; copies each layer slice
+                  every step — kept for the §Perf before/after record).
+    """
+    assert not cfg.is_encoder_only, "encoder-only archs have no decode step"
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = logical(x, "batch", "seq", "embed")
+    pos = cache["pos"]
+    groups = layer_groups(cfg)
+    new_caches = []
+    for gi, (kind, n, win) in enumerate(groups):
+        if cfg.decode_impl == "carry":
+            def body_c(carry, layer_in, _kind=kind, _win=win):
+                xx, caches = carry
+                p_l, idx = layer_in
+                xx, caches = _apply_decode_carry(cfg, _kind, p_l, caches,
+                                                 idx, xx, pos, _win)
+                return (xx, caches), None
+
+            (x, group_cache), _ = jax.lax.scan(
+                body_c, (x, cache["groups"][gi]),
+                (params["groups"][gi], jnp.arange(n)))
+            new_caches.append(group_cache)
+        else:
+            def body(xx, layer_in, _kind=kind, _win=win):
+                p_l, cache_l = layer_in
+                xx, new_cache_l = _apply_decode(cfg, _kind, p_l, cache_l, xx,
+                                                pos, _win)
+                return xx, new_cache_l
+
+            x, ys = jax.lax.scan(body, x,
+                                 (params["groups"][gi],
+                                  cache["groups"][gi]))
+            new_caches.append(ys)
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0] @ _lm_head(cfg, params)).astype(jnp.float32)
+    logits = logical(logits, "batch", "vocab")
+    return logits, {"groups": new_caches, "pos": pos + 1}

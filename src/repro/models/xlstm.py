@@ -1,0 +1,209 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory), both with exponential gating and the max-stabilizer.
+
+Simplifications (documented in DESIGN §4): sLSTM uses a diagonal recurrent
+connection instead of block-diagonal R matrices; both blocks use the
+chunked-recurrent execution pattern shared with ``ssm.py`` (inner scans are
+jax.checkpoint'ed).  The recurrences themselves follow the paper's equations
+including the m-stabilizer, so smoke tests check numerical sanity at fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+from repro.models.common import cdtype, dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(cfg, key) -> Dict:
+    dt = cdtype(cfg)
+    d, H = cfg.d_model, cfg.n_heads
+    dh = cfg.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, (H * dh,), dt),
+        "wk": dense_init(ks[1], d, (H * dh,), dt),
+        "wv": dense_init(ks[2], d, (H * dh,), dt),
+        "wi": dense_init(ks[3], d, (H,), jnp.float32),
+        "wf": dense_init(ks[4], d, (H,), jnp.float32),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),   # forget-open init
+        "wo_gate": dense_init(ks[5], d, (H * dh,), dt),
+        "out_proj": dense_init(jax.random.fold_in(key, 7), H * dh, (d,), dt),
+    }
+
+
+def mlstm_cache_init(cfg, batch: int) -> Dict:
+    H, dh = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+def _mlstm_step(state, inp):
+    C, n, m = state
+    q, k, v, i_t, f_t = inp            # q/k/v: (B,H,dh); gates: (B,H)
+    m_new = jnp.maximum(f_t + m, i_t)
+    # exp(-inf - m) handled: where m == -inf, f' = 0
+    f_p = jnp.exp(jnp.where(jnp.isinf(m), -jnp.inf, f_t + m - m_new))
+    i_p = jnp.exp(i_t - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhd->bhe", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _gates_qkv(cfg, p, x):
+    B, S, _ = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dh) / jnp.sqrt(dh).astype(x.dtype)
+    k = (x @ p["wk"]).reshape(B, S, H, dh) / jnp.sqrt(dh).astype(x.dtype)
+    v = (x @ p["wv"]).reshape(B, S, H, dh)
+    i_t = (x.astype(jnp.float32) @ p["wi"])
+    f_t = (x.astype(jnp.float32) @ p["wf"]) + p["f_bias"]
+    return q, k, v, i_t, f_t
+
+
+def _chunked_recurrence(step_fn, state0, seq_inputs, S, chunk):
+    """Shared outer-chunk / inner-checkpointed-scan runner.
+
+    seq_inputs: tuple of arrays shaped (B, S, ...) -> scanned over S.
+    Returns (final_state, outputs (B, S, ...)).
+    """
+    B = seq_inputs[0].shape[0]
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+
+    def pad_split(t):
+        t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        return (t.reshape(B, n_chunks, chunk, *t.shape[2:])
+                .transpose(1, 2, 0, *range(3, t.ndim + 1)))
+
+    xs = tuple(pad_split(t) for t in seq_inputs)
+    inner = jax.checkpoint(lambda c, s: jax.lax.scan(step_fn, c, s))
+    final, ys = jax.lax.scan(inner, state0, xs)
+    # ys: (n_chunks, chunk, B, ...) -> (B, S, ...)
+    ys = ys.transpose(2, 0, 1, *range(3, ys.ndim)).reshape(
+        B, n_chunks * chunk, *ys.shape[3:])
+    return final, ys[:, :S]
+
+
+def mlstm_forward(cfg, p, x) -> Tuple[jax.Array, Dict]:
+    B, S, d = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    q, k, v, i_t, f_t = _gates_qkv(cfg, p, x)
+    state0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+              jnp.zeros((B, H, dh), jnp.float32),
+              jnp.full((B, H), -jnp.inf, jnp.float32))
+    final, h = _chunked_recurrence(_mlstm_step, state0,
+                                   (q, k, v, i_t, f_t), S,
+                                   min(cfg.ssm_chunk, S))
+    o = jax.nn.sigmoid((x @ p["wo_gate"]).reshape(B, S, H, dh)
+                       .astype(jnp.float32))
+    out = (h * o).astype(x.dtype).reshape(B, S, H * dh) @ p["out_proj"]
+    C, n, m = final
+    return logical(out, "batch", "seq", "embed"), {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(cfg, p, x, cache: Dict) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    H, dh = cfg.n_heads, cfg.head_dim
+    q, k, v, i_t, f_t = _gates_qkv(cfg, p, x)
+    state = (cache["C"], cache["n"], cache["m"])
+    (C, n, m), h = _mlstm_step(state, (q[:, 0], k[:, 0], v[:, 0],
+                                       i_t[:, 0], f_t[:, 0]))
+    o = jax.nn.sigmoid((x[:, 0] @ p["wo_gate"]).reshape(B, H, dh)
+                       .astype(jnp.float32))
+    out = ((h * o).astype(x.dtype).reshape(B, H * dh) @ p["out_proj"])
+    return logical(out[:, None], "batch", "seq", "embed"), \
+        {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(cfg, key) -> Dict:
+    dt = cdtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": dense_init(ks[0], d, (d,), dt),
+        "wi": dense_init(ks[1], d, (d,), jnp.float32),
+        "wf": dense_init(ks[2], d, (d,), jnp.float32),
+        "wo_gate": dense_init(ks[3], d, (d,), dt),
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "r_diag": jnp.zeros((d,), jnp.float32),   # diagonal recurrence (simplified R)
+        "out_proj": dense_init(ks[4], d, (d,), dt),
+    }
+
+
+def slstm_cache_init(cfg, batch: int) -> Dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+    }
+
+
+def _slstm_step(p, state, inp):
+    c, n, h_prev, m = state
+    z_in, i_in, f_in, o_in = inp       # (B, d) each
+    r = p["r_diag"]
+    z_t = jnp.tanh(z_in.astype(jnp.float32) + r * h_prev)
+    i_t = i_in + r * h_prev
+    f_t = f_in + r * h_prev
+    m_new = jnp.maximum(f_t + m, i_t)
+    f_p = jnp.exp(jnp.where(jnp.isinf(m), -jnp.inf, f_t + m - m_new))
+    i_p = jnp.exp(i_t - m_new)
+    c = f_p * c + i_p * z_t
+    n = f_p * n + i_p
+    h = jax.nn.sigmoid(o_in.astype(jnp.float32)) * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new), h
+
+
+def slstm_forward(cfg, p, x) -> Tuple[jax.Array, Dict]:
+    B, S, d = x.shape
+    z_in = x @ p["wz"]
+    i_in = x.astype(jnp.float32) @ p["wi"]
+    f_in = (x.astype(jnp.float32) @ p["wf"]) + p["f_bias"]
+    o_in = x @ p["wo_gate"]
+    state0 = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+              jnp.zeros((B, d), jnp.float32),
+              jnp.full((B, d), -jnp.inf, jnp.float32))
+    final, h = _chunked_recurrence(lambda s, i: _slstm_step(p, s, i), state0,
+                                   (z_in, i_in, f_in, o_in), S,
+                                   min(cfg.ssm_chunk, S))
+    out = h.astype(x.dtype) @ p["out_proj"]
+    c, n, hh, m = final
+    return logical(out, "batch", "seq", "embed"), \
+        {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_decode(cfg, p, x, cache: Dict) -> Tuple[jax.Array, Dict]:
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    z_in = x[:, 0] @ p["wz"]
+    i_in = x[:, 0].astype(jnp.float32) @ p["wi"]
+    f_in = (x[:, 0].astype(jnp.float32) @ p["wf"]) + p["f_bias"]
+    o_in = x[:, 0] @ p["wo_gate"]
+    (c, n, h, m), out_h = _slstm_step(p, state, (z_in, i_in, f_in, o_in))
+    out = (out_h.astype(x.dtype) @ p["out_proj"])[:, None]
+    return logical(out, "batch", "seq", "embed"), \
+        {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,3 @@
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.kvcache import PagedHeadCache
+from repro.serving.request import Request, RequestState

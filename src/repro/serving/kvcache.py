@@ -1,0 +1,200 @@
+"""Head-granular paged KV cache (paper §6, "KV cache management").
+
+vLLM pages cache at (sequence, block) granularity; Hetis splits further on
+the head dimension so different head groups of ONE request can live on
+different devices.  A block here is (kv-head-group, page of tokens): the
+physical pool stores (slot, layer, page_size, head_dim) for K and V, and the
+block table maps (request, group, page_index) -> (device, slot).
+
+The pool is partitioned into per-device slot ranges (the CPU engine holds
+one physical array; device partitions are slot intervals — on a real
+cluster each partition is device-local memory).  ``gather_dense`` fetches a
+request's pages back into the dense (L, ctx, Hkv, dh) view for compute; the
+Pallas paged-attention kernel consumes the same block tables on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class DevicePartition:
+    device_id: int
+    slots: List[int]                    # free slot indices
+    total: int
+
+    @property
+    def free(self) -> int:
+        return len(self.slots)
+
+    @property
+    def used(self) -> int:
+        return self.total - len(self.slots)
+
+
+class PagedHeadCache:
+    """Physical pool + head-granular block tables."""
+
+    def __init__(self, cfg: ModelConfig, device_slots: Dict[int, int],
+                 page_size: int = 16, dtype=np.float32):
+        assert cfg.attn_type == "gqa", \
+            "paged head cache implemented for GQA; MLA/ssm use dense path"
+        self.cfg = cfg
+        self.page = page_size
+        total = sum(device_slots.values())
+        L, dh = cfg.n_layers, cfg.head_dim
+        self.kpool = np.zeros((total, L, page_size, dh), dtype)
+        self.vpool = np.zeros((total, L, page_size, dh), dtype)
+        self.partitions: Dict[int, DevicePartition] = {}
+        start = 0
+        for dev, n in device_slots.items():
+            self.partitions[dev] = DevicePartition(
+                dev, list(range(start, start + n)), n)
+            start += n
+        # (rid, group) -> list of (device, slot)
+        self.tables: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+        # (rid, group) -> tokens stored
+        self.lengths: Dict[Tuple[int, int], int] = {}
+
+    # -- helpers -------------------------------------------------------------
+    def slots_per_token_group(self) -> float:
+        return 1.0 / self.page
+
+    def bytes_per_slot(self) -> int:
+        return int(2 * self.cfg.n_layers * self.page * self.cfg.head_dim
+                   * self.kpool.itemsize)
+
+    def free_slots(self, device_id: int) -> int:
+        return self.partitions[device_id].free
+
+    # -- allocation ------------------------------------------------------------
+    def ensure_capacity(self, rid: int, group: int, device_id: int,
+                        n_tokens: int) -> bool:
+        """Grow the (rid, group) chain on ``device_id`` to hold n_tokens."""
+        key = (rid, group)
+        chain = self.tables.setdefault(key, [])
+        need_pages = -(-n_tokens // self.page)
+        part = self.partitions[device_id]
+        while len(chain) < need_pages:
+            if not part.slots:
+                return False
+            chain.append((device_id, part.slots.pop()))
+        self.lengths[key] = max(self.lengths.get(key, 0), n_tokens)
+        return True
+
+    def append_token(self, rid: int, group: int, device_id: int,
+                     layer_kv: Optional[Tuple[np.ndarray, np.ndarray]] = None
+                     ) -> bool:
+        """Reserve room for one more token (and optionally store its K/V
+        (L, dh) vectors)."""
+        key = (rid, group)
+        n = self.lengths.get(key, 0)
+        if not self.ensure_capacity(rid, group, device_id, n + 1):
+            return False
+        if layer_kv is not None:
+            self.store_token(rid, group, n, layer_kv[0], layer_kv[1])
+        self.lengths[key] = n + 1
+        return True
+
+    def store_token(self, rid: int, group: int, pos: int,
+                    k: np.ndarray, v: np.ndarray) -> None:
+        """k, v: (L, dh) for this group at position pos."""
+        dev_slot = self.tables[(rid, group)][pos // self.page]
+        off = pos % self.page
+        self.kpool[dev_slot[1], :, off] = k
+        self.vpool[dev_slot[1], :, off] = v
+
+    def store_prompt(self, rid: int, group: int, k: np.ndarray,
+                     v: np.ndarray) -> None:
+        """k, v: (L, ctx, dh) — bulk store after prefill."""
+        ctx = k.shape[1]
+        chain = self.tables[(rid, group)]
+        for p in range(-(-ctx // self.page)):
+            lo, hi = p * self.page, min((p + 1) * self.page, ctx)
+            self.kpool[chain[p][1], :, :hi - lo] = k[:, lo:hi]
+            self.vpool[chain[p][1], :, :hi - lo] = v[:, lo:hi]
+
+    # -- retrieval ---------------------------------------------------------------
+    def gather_dense(self, rid: int, max_len: int) -> Tuple[np.ndarray,
+                                                            np.ndarray]:
+        """Reassemble (L, max_len, Hkv, dh) dense K/V from pages (what the
+        Pallas kernel avoids doing on TPU)."""
+        cfg = self.cfg
+        L, dh = cfg.n_layers, cfg.head_dim
+        K = np.zeros((L, max_len, cfg.n_kv_heads, dh), self.kpool.dtype)
+        V = np.zeros_like(K)
+        for g in range(cfg.n_kv_heads):
+            key = (rid, g)
+            chain = self.tables.get(key, [])
+            n = self.lengths.get(key, 0)
+            for p, (_, slot) in enumerate(chain):
+                lo = p * self.page
+                hi = min(lo + self.page, n, max_len)
+                if hi <= lo:
+                    break
+                K[:, lo:hi, g] = self.kpool[slot, :, :hi - lo]
+                V[:, lo:hi, g] = self.vpool[slot, :, :hi - lo]
+        return K, V
+
+    def block_table(self, rid: int, group: int) -> List[int]:
+        return [slot for _, slot in self.tables.get((rid, group), [])]
+
+    # -- release / migration --------------------------------------------------------
+    def release(self, rid: int) -> int:
+        """Free all pages of a request; returns slots released."""
+        released = 0
+        for key in [k for k in self.tables if k[0] == rid]:
+            for dev, slot in self.tables[key]:
+                self.partitions[dev].slots.append(slot)
+                released += 1
+            del self.tables[key]
+            self.lengths.pop(key, None)
+        return released
+
+    def migrate_group(self, rid: int, group: int, dst_device: int
+                      ) -> Tuple[int, float]:
+        """Move one head group's pages to another device partition.
+        Returns (pages_moved, bytes_moved).  Physical copy included — the
+        live-migration path the Hauler schedules into overlap windows."""
+        key = (rid, group)
+        chain = self.tables.get(key, [])
+        dst = self.partitions[dst_device]
+        moved = 0
+        nbytes = 0.0
+        new_chain = []
+        for dev, slot in chain:
+            if dev == dst_device:
+                new_chain.append((dev, slot))
+                continue
+            if not dst.slots:
+                new_chain.append((dev, slot))
+                continue
+            nslot = dst.slots.pop()
+            self.kpool[nslot] = self.kpool[slot]
+            self.vpool[nslot] = self.vpool[slot]
+            self.partitions[dev].slots.append(slot)
+            new_chain.append((dst_device, nslot))
+            moved += 1
+            nbytes += self.bytes_per_slot()
+        self.tables[key] = new_chain
+        return moved, nbytes
+
+    # -- invariants (used by hypothesis tests) -----------------------------------------
+    def check_invariants(self) -> None:
+        used = set()
+        for key, chain in self.tables.items():
+            for dev, slot in chain:
+                assert slot not in used, f"slot {slot} double-booked"
+                used.add(slot)
+        for dev, part in self.partitions.items():
+            for s in part.slots:
+                assert s not in used, f"slot {s} both free and used"
+        total = sum(p.total for p in self.partitions.values())
+        n_free = sum(p.free for p in self.partitions.values())
+        assert len(used) + n_free == total

@@ -1,0 +1,3 @@
+from repro.sim.des import SimResult, simulate
+from repro.sim.systems import HetisSystem, HexgenSystem, SplitwiseSystem
+from repro.sim.workloads import WORKLOADS, make_trace

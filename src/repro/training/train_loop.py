@@ -1,0 +1,76 @@
+"""Restart-safe training loop (substrate for the train_4k shapes).
+
+Deterministic data (step-indexed batches), atomic checkpoints, and a
+straggler/fault hook: if a step exceeds ``straggler_factor`` x the EWMA step
+time, the event is logged and (on a real cluster) the Parallelizer would be
+re-consulted — here the hook records the decision for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 50
+    lr: float = 3e-4
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 20
+    seed: int = 0
+    straggler_factor: float = 3.0
+
+
+def train(cfg: ModelConfig, data_cfg: DataConfig, tcfg: TrainConfig
+          ) -> Dict[str, List[float]]:
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = T.init_params(cfg, key)
+    opt = adamw_init(params)
+    start_step = 0
+    if tcfg.ckpt_dir:
+        step, state = ckpt.restore_latest(tcfg.ckpt_dir,
+                                          {"params": params, "opt": opt})
+        if step is not None:
+            params, opt = state["params"], state["opt"]
+            start_step = step
+
+    @jax.jit
+    def step_fn(params, opt, batch):
+        (loss, met), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch), has_aux=True)(params)
+        params, opt, gnorm = adamw_update(params, grads, opt, lr=tcfg.lr)
+        return params, opt, loss, gnorm
+
+    data = SyntheticLM(data_cfg)
+    losses: List[float] = []
+    events: List[str] = []
+    ewma = None
+    for step in range(start_step, tcfg.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        t0 = time.perf_counter()
+        params, opt, loss, gnorm = step_fn(params, opt, batch)
+        loss = float(loss)
+        dt = time.perf_counter() - t0
+        if ewma is None:
+            ewma = dt
+        elif dt > tcfg.straggler_factor * ewma:
+            events.append(f"straggler@step{step}:{dt:.3f}s vs {ewma:.3f}s")
+        ewma = 0.9 * ewma + 0.1 * dt if ewma else dt
+        losses.append(loss)
+        if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
+            ckpt.save(tcfg.ckpt_dir, step + 1,
+                      {"params": params, "opt": opt})
+    if tcfg.ckpt_dir:
+        ckpt.save(tcfg.ckpt_dir, tcfg.steps, {"params": params, "opt": opt})
+    return {"losses": losses, "events": events}

@@ -1,0 +1,72 @@
+"""Cost-model calibration: the device gaps that motivate the paper."""
+
+import pytest
+
+from repro.core.cluster import DEVICE_CLASSES, ClusterSpec
+from repro.core.costmodel import (LLAMA_70B, OPT_2_7B, attn_module_time,
+                                  dense_module_time, allreduce_time,
+                                  p2p_time, pipeline_iteration_time,
+                                  StageConfig)
+
+
+def test_prefill_gap_ordering():
+    """Table 1: A100 < 3090 < P100, and the P100 gap is large (>=10x)."""
+    times = {}
+    for cls in ("A100", "3090", "P100"):
+        times[cls] = dense_module_time(DEVICE_CLASSES[cls], OPT_2_7B,
+                                       tokens=1536, phase="prefill")
+    assert times["A100"] < times["3090"] < times["P100"]
+    assert times["P100"] / times["A100"] > 10.0
+
+
+def test_decode_gap_smaller_than_prefill_gap():
+    """Table 1: the decode gap (7.9x) is smaller than prefill (24.5x)."""
+    def gap(phase, tokens):
+        a = dense_module_time(DEVICE_CLASSES["A100"], OPT_2_7B, tokens,
+                              phase=phase)
+        p = dense_module_time(DEVICE_CLASSES["P100"], OPT_2_7B, tokens,
+                              phase=phase)
+        return p / a
+    assert gap("decode", 25) < gap("prefill", 1536)
+
+
+def test_attention_gap_narrower_than_mlp_gap():
+    """Fig 2: the Attention device gap is much smaller than the MLP gap."""
+    mlp_gap = (dense_module_time(DEVICE_CLASSES["P100"], LLAMA_70B, 25,
+                                 n_layers=1)
+               / dense_module_time(DEVICE_CLASSES["A100"], LLAMA_70B, 25,
+                                   n_layers=1))
+    attn_gap = (attn_module_time(DEVICE_CLASSES["P100"], LLAMA_70B, 25,
+                                 1000, n_layers=1)
+                / attn_module_time(DEVICE_CLASSES["A100"], LLAMA_70B, 25,
+                                   1000, n_layers=1))
+    assert mlp_gap > 5 * attn_gap
+    assert mlp_gap > 20.0
+
+
+def test_comm_models():
+    cl = ClusterSpec.paper_testbed()
+    devs = cl.devices
+    t1 = allreduce_time(devs[:2], 1e6, cl)
+    t2 = allreduce_time(devs[:4], 1e6, cl)
+    assert t2 > t1 > 0
+    assert p2p_time(devs[0], devs[0], 1e9, cl) == 0.0
+    assert p2p_time(devs[0], devs[4], 1e6, cl) > \
+        p2p_time(devs[0], devs[1], 1e6, cl) * 0.5
+
+
+def test_pipeline_time_monotone_in_batch():
+    cl = ClusterSpec.paper_testbed()
+    a100s = cl.by_class()["A100"]
+    stages = [StageConfig(tuple(a100s), LLAMA_70B.n_layers)]
+    t1 = pipeline_iteration_time(stages, LLAMA_70B, cl, 8, 1.0, 512,
+                                 "decode")
+    t2 = pipeline_iteration_time(stages, LLAMA_70B, cl, 64, 1.0, 512,
+                                 "decode")
+    assert t2 >= t1
+
+
+def test_kv_bytes():
+    # GQA llama-70b: 2 * 8 kv heads * 128 dh * 2B = 4096 B/token/layer
+    assert LLAMA_70B.kv_bytes_per_token_layer() == 4096
+    assert LLAMA_70B.gqa_ratio == 8

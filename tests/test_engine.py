@@ -1,0 +1,88 @@
+"""Serving-engine integration: token exactness, eviction, failure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import EngineConfig, InferenceEngine, Request
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                  head_dim=16, dtype="float32", remat=False,
+                  scan_q_chunk=64, loss_chunk=64)
+KEY = jax.random.PRNGKey(0)
+PARAMS = T.init_params(CFG, KEY)
+
+
+def make_engine(max_seq=96, cache_gb=None):
+    cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
+    return InferenceEngine(CFG, PARAMS, cl, primary_ids=[0],
+                           pool_ids=[1, 2],
+                           engine_cfg=EngineConfig(
+                               max_batch=8, max_seq=max_seq,
+                               cache_gb_per_device=cache_gb))
+
+
+def ref_decode(prompt, n, max_seq=96):
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, cache = T.prefill(CFG, PARAMS, {"tokens": toks},
+                              max_seq=max_seq)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n - 1):
+        l2, cache = T.decode_step(CFG, PARAMS, cache,
+                                  jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(l2[0])))
+    return out
+
+
+def test_engine_token_exactness():
+    eng = make_engine()
+    rng = np.random.default_rng(0)
+    prompts = [[int(x) for x in rng.integers(0, 128, rng.integers(4, 12))]
+               for _ in range(5)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+    eng.run_until_drained(300)
+    assert len(eng.finished) == 5
+    for r in eng.finished:
+        assert r.output == ref_decode(r.prompt, r.max_new_tokens)
+    eng.kv.check_invariants()
+
+
+def test_engine_metrics_monotone_clock():
+    eng = make_engine()
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4,
+                       arrival=0.5))
+    eng.run_until_drained(100)
+    r = eng.finished[0]
+    assert r.ttft is not None and r.ttft >= 0
+    assert r.finish_time >= r.arrival
+    assert eng.metrics["steps"] > 0
+
+
+def test_engine_admission_respects_capacity():
+    # tiny pool: force queuing rather than crash
+    eng = make_engine(cache_gb={0: 1e-5, 1: 1e-5, 2: 1e-5})
+    eng.submit(Request(rid=0, prompt=list(range(40)), max_new_tokens=4))
+    eng.step()
+    # either queued (infeasible) or admitted if it fit — never crashes
+    assert eng.metrics["steps"] == 1
+
+
+def test_worker_failure_redispatch():
+    from repro.core.dispatcher import handle_worker_failure
+    eng = make_engine()
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1, 2, 3, 4], max_new_tokens=8))
+    eng.step()
+    eng.step()
+    decisions, evicted = handle_worker_failure(
+        eng.workers, list(eng.attn_reqs.values()), device_id=2)
+    for ar in eng.attn_reqs.values():
+        assert 2 not in ar.placement
+    dead = [w for w in eng.workers if w.device_id == 2][0]
+    assert not dead.alive and dead.heads == 0

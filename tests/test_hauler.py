@@ -1,0 +1,44 @@
+"""Hauler: migration planning + overlap-window scheduling (§6)."""
+
+from repro.core.hauler import (MigrationScheduler, MigrationTask,
+                               migration_bytes, plan_migration)
+from repro.core.profiler import TransferModel
+
+
+def test_overlap_reuse_minimizes_moves():
+    """Heads staying on the same device never move (§5.3 overlap reuse)."""
+    old = {0: 16, 1: 16}
+    new = {0: 8, 1: 16, 2: 8}
+    tasks = plan_migration(1, old, new, kv_bytes_per_head=1e6)
+    assert sum(t.heads for t in tasks) == 8          # only the diff moves
+    assert all(t.src_device == 0 and t.dst_device == 2 for t in tasks)
+
+
+def test_identical_placement_no_tasks():
+    assert plan_migration(1, {0: 32}, {0: 32}, 1e6) == []
+
+
+def test_conservation():
+    old = {0: 24, 1: 8}
+    new = {2: 32}
+    tasks = plan_migration(1, old, new, 1e6)
+    assert sum(t.heads for t in tasks) == 32
+    assert migration_bytes(tasks) == 32e6
+
+
+def test_scheduler_budget_and_carryover():
+    tm = TransferModel(gamma=1 / 1e9, beta=0.0)   # 1 GB/s
+    sched = MigrationScheduler({(0, 1): tm})
+    sched.submit([MigrationTask(1, 0, 1, 8, nbytes=2e9)])   # needs 2 s
+    done = sched.advance(window_s=0.5)
+    assert not done and sched.pending
+    assert abs(sched.pending[0].remaining - 1.5e9) / 1.5e9 < 0.01
+    done = sched.advance(window_s=5.0)
+    assert len(done) == 1 and not sched.pending
+
+
+def test_drain_time():
+    tm = TransferModel(gamma=1 / 1e9, beta=0.0)
+    sched = MigrationScheduler({(0, 1): tm})
+    sched.submit([MigrationTask(1, 0, 1, 8, nbytes=3e9)])
+    assert abs(sched.drain_seconds() - 3.0) < 1e-6

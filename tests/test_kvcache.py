@@ -1,0 +1,94 @@
+"""Paged head-granular KV cache invariants — hypothesis state machine."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig
+from repro.serving.kvcache import PagedHeadCache
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  head_dim=16, dtype="float32")
+
+
+def make_cache(slots=(8, 8)):
+    return PagedHeadCache(CFG, {i: n for i, n in enumerate(slots)},
+                          page_size=4)
+
+
+def test_alloc_release_roundtrip():
+    kv = make_cache()
+    assert kv.ensure_capacity(0, 0, 0, 10)      # 3 pages
+    assert kv.partitions[0].used == 3
+    kv.check_invariants()
+    assert kv.release(0) == 3
+    assert kv.partitions[0].used == 0
+    kv.check_invariants()
+
+
+def test_store_gather_exact():
+    kv = make_cache()
+    L, dh = CFG.n_layers, CFG.head_dim
+    ctx = 10
+    rng = np.random.default_rng(0)
+    data = {}
+    for g in range(CFG.n_kv_heads):
+        kv.ensure_capacity(0, g, g % 2, ctx)
+        kv.lengths[(0, g)] = ctx
+        k = rng.random((L, ctx, dh)).astype(np.float32)
+        v = rng.random((L, ctx, dh)).astype(np.float32)
+        kv.store_prompt(0, g, k, v)
+        data[g] = (k, v)
+    K, V = kv.gather_dense(0, ctx)
+    for g in range(CFG.n_kv_heads):
+        np.testing.assert_array_equal(K[:, :, g], data[g][0])
+        np.testing.assert_array_equal(V[:, :, g], data[g][1])
+
+
+def test_append_token_and_migrate():
+    kv = make_cache()
+    L, dh = CFG.n_layers, CFG.head_dim
+    for g in range(CFG.n_kv_heads):
+        kv.ensure_capacity(0, g, 0, 4)
+        kv.lengths[(0, g)] = 4
+        kv.store_prompt(0, g, np.ones((L, 4, dh), np.float32),
+                        np.ones((L, 4, dh), np.float32))
+    ok = kv.append_token(0, 0, 0, (np.full((L, dh), 7.0, np.float32),
+                                   np.full((L, dh), 8.0, np.float32)))
+    assert ok
+    K, V = kv.gather_dense(0, 5)
+    assert np.all(K[:, 4, 0] == 7.0) and np.all(V[:, 4, 0] == 8.0)
+    moved, nbytes = kv.migrate_group(0, 0, dst_device=1)
+    assert moved == 2 and nbytes == moved * kv.bytes_per_slot()
+    kv.check_invariants()
+    K2, _ = kv.gather_dense(0, 5)
+    np.testing.assert_array_equal(K[:, :, 0], K2[:, :, 0])  # data survives
+
+
+def test_exhaustion_returns_false():
+    kv = make_cache(slots=(2, 0))
+    assert kv.ensure_capacity(0, 0, 0, 8)       # 2 pages
+    assert not kv.ensure_capacity(1, 0, 0, 4)   # no slots left
+    kv.check_invariants()
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["alloc", "release", "migrate"]),
+              st.integers(0, 3), st.integers(0, 1), st.integers(1, 24)),
+    min_size=1, max_size=30))
+def test_property_no_double_booking(ops):
+    kv = make_cache(slots=(6, 6))
+    for op, rid, dev, n in ops:
+        if op == "alloc":
+            for g in range(CFG.n_kv_heads):
+                if kv.ensure_capacity(rid, g, dev, n):
+                    kv.lengths[(rid, g)] = n
+        elif op == "release":
+            kv.release(rid)
+        else:
+            for g in range(CFG.n_kv_heads):
+                if (rid, g) in kv.tables:
+                    kv.migrate_group(rid, g, dev)
+        kv.check_invariants()

@@ -1,0 +1,57 @@
+"""Primary-worker parallelism: the hierarchical sigma* search (§4.1)."""
+
+import time
+
+import pytest
+
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import LLAMA_13B, LLAMA_70B
+from repro.core.parallelizer import (RequestDistribution, assign_layers,
+                                     c_p, search)
+
+R = RequestDistribution(batch=25, prefill_len=512, decode_ctx=1000,
+                        avg_output_len=128)
+
+
+def test_paper_deployment_llama70b():
+    """§7.2: A100s + 3090s primary, P100s -> attention pool."""
+    plan = search(ClusterSpec.paper_testbed(), LLAMA_70B, R)
+    pool_classes = {d.cls.name for d in plan.attention_workers}
+    primary_classes = {d.cls.name for d in plan.primary_workers}
+    assert pool_classes == {"P100"}
+    assert primary_classes == {"A100", "3090"}
+
+
+def test_layer_assignment_sums_and_positivity():
+    layers = assign_layers([("A100", 4), ("3090", 4), ("P100", 4)], 80)
+    assert sum(layers) == 80
+    assert all(x >= 1 for x in layers)
+    # high-end stage gets the most layers
+    assert layers[0] == max(layers)
+
+
+def test_delta_controls_exclusion():
+    cl = ClusterSpec.paper_testbed()
+    strict = search(cl, LLAMA_70B, R, delta=0.0)
+    loose = search(cl, LLAMA_70B, R, delta=0.5)
+    assert len(loose.attention_workers) >= len(strict.attention_workers)
+
+
+def test_search_is_fast_at_scale():
+    """§7.4: 5 types x 32 GPUs searched in seconds (paper: 15 s)."""
+    big = ClusterSpec.build([("H100", 8)] * 4 + [("A100", 8)] * 4
+                            + [("3090", 8)] * 4 + [("L4", 8)] * 4
+                            + [("P100", 8)] * 4)
+    t0 = time.perf_counter()
+    plan = search(big, LLAMA_70B, RequestDistribution(batch=200,
+                                                      decode_ctx=1000))
+    assert time.perf_counter() - t0 < 15.0
+    assert plan.primary_workers and plan.attention_workers
+
+
+def test_cp_continuous_matches_total_power():
+    groups = [("A100", 2), ("P100", 2)]
+    v = c_p(groups, LLAMA_13B, R)
+    v_without = c_p([("A100", 2)], LLAMA_13B, R)
+    # removing near-zero-power devices barely changes C_p
+    assert v_without / v < 1.05

@@ -1,0 +1,75 @@
+"""Partition-spec construction rules: divisibility, duplicates, coverage."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable
+from repro.launch.partition import (batch_pspecs, cache_pspecs, dim_axis,
+                                    param_pspecs)
+from repro.launch.steps import input_specs
+from repro.models import transformer as T
+
+SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axes_of(spec):
+    out = []
+    for entry in spec:
+        if entry is None:
+            continue
+        out.extend(entry if isinstance(entry, tuple) else (entry,))
+    return out
+
+
+def _check_tree(specs, shapes, multi_pod):
+    flat_s = jax.tree.flatten(specs,
+                              is_leaf=lambda x: isinstance(x, P))[0]
+    flat_l = jax.tree.flatten(shapes)[0]
+    assert len(flat_s) == len(flat_l)
+    for spec, leaf in zip(flat_s, flat_l):
+        axes = _axes_of(spec)
+        assert len(set(axes)) == len(axes), f"dup axes {spec}"
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            n = 1
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                n *= SIZES[a]
+            assert dim % n == 0, f"{spec} does not divide {leaf.shape}"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_valid(arch, multi_pod):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_pspecs(cfg, shapes, multi_pod)
+    _check_tree(specs, shapes, multi_pod)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_14b", "hymba_1p5b",
+                                  "deepseek_v3_671b", "xlstm_350m"])
+def test_cache_specs_valid(arch):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: T.init_cache(cfg, 128, 1024))
+    specs = cache_pspecs(cfg, shapes, False)
+    _check_tree(specs, shapes, False)
+
+
+def test_dim_axis_validation():
+    assert dim_axis(256, ("data",), False) == ("data",)
+    assert dim_axis(1, ("data",), False) is None
+    assert dim_axis(504, "model", False) is None     # hubert vocab
+    assert dim_axis(151936, "model", False) == "model"
+
+
+def test_kv_split_choice():
+    """Paper-faithful head split when kv-heads divide the axis, else
+    sequence split (DESIGN §5)."""
+    assert get_config("phi3-mini-3.8b").kv_heads_shardable(16)      # kv=32
+    assert get_config("qwen1.5-0.5b").kv_heads_shardable(16)        # kv=16
+    assert not get_config("qwen3-14b").kv_heads_shardable(16)       # kv=8
+    assert not get_config("hymba-1.5b").kv_heads_shardable(16)      # kv=5
+    assert not get_config("deepseek-v3-671b").kv_heads_shardable(16)  # MLA

@@ -1,0 +1,68 @@
+"""Simulator + baselines: the paper's qualitative results must hold."""
+
+import pytest
+
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import LLAMA_13B, LLAMA_70B
+from repro.sim import (HetisSystem, HexgenSystem, SplitwiseSystem,
+                       make_trace, simulate)
+
+CL = ClusterSpec.paper_testbed()
+
+
+@pytest.fixture(scope="module")
+def results():
+    trace = make_trace("sharegpt", rate=1.5, duration=30, seed=0)
+    out = {}
+    for cls in (HetisSystem, HexgenSystem, SplitwiseSystem):
+        sys_ = cls(LLAMA_70B, CL)
+        out[sys_.name] = (sys_, simulate(sys_, trace, "sharegpt", 1.5,
+                                         max_sim_seconds=300))
+    return out
+
+
+def test_hetis_beats_baselines_on_latency(results):
+    h = results["hetis"][1].normalized_latency()
+    assert results["hexgen"][1].normalized_latency() >= h * 0.95
+    assert results["splitwise"][1].normalized_latency() > h
+
+
+def test_hetis_has_most_cache(results):
+    caps = {name: sys_.kv_capacity_tokens()
+            for name, (sys_, _) in results.items()}
+    assert caps["hetis"] > caps["hexgen"]
+    assert caps["hetis"] > caps["splitwise"]
+
+
+def test_all_requests_served(results):
+    for name, (_, res) in results.items():
+        assert len(res.served) == len(res.finished), name
+        for r in res.served:
+            assert r.ttft is not None and r.ttft >= 0
+            assert r.finish >= r.trace.arrival
+
+
+def test_splitwise_memory_inefficiency(results):
+    """Fig 1a: phase splitting strands cache capacity."""
+    assert (results["splitwise"][0].kv_capacity_tokens()
+            < 0.5 * results["hetis"][0].kv_capacity_tokens())
+
+
+def test_workload_stats():
+    for wl, in_lo, in_hi in (("sharegpt", 150, 600),
+                             ("humaneval", 60, 300),
+                             ("longbench", 4000, 13000)):
+        tr = make_trace(wl, rate=5.0, duration=60, seed=1)
+        mean_in = sum(t.prompt_len for t in tr) / len(tr)
+        assert in_lo < mean_in < in_hi, (wl, mean_in)
+
+
+def test_fault_tolerance_failover():
+    sys_ = HetisSystem(LLAMA_13B, CL)
+    trace = make_trace("sharegpt", rate=2.0, duration=10, seed=2)
+    res = simulate(sys_, trace, "sharegpt", 2.0, max_sim_seconds=120)
+    # kill a pool device post-hoc and ensure re-dispatch leaves no orphans
+    pool_dev = [w for w in sys_.workers if w.xfer is not None][0]
+    sys_.fail_device(pool_dev.device_id)
+    for ar in sys_.attn_reqs.values():
+        assert pool_dev.device_id not in ar.placement

@@ -1,0 +1,68 @@
+"""End-to-end behaviour of the whole system (brief deliverable (c))."""
+
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import LLAMA_13B
+from repro.core.parallelizer import RequestDistribution, search
+from repro.models import transformer as T
+from repro.serving import EngineConfig, InferenceEngine, Request
+from repro.sim import HetisSystem, make_trace, simulate
+
+
+def test_paper_pipeline_end_to_end():
+    """Parallelizer -> Dispatcher -> engine on one stack: plan a cluster,
+    then serve real tokens with the planned roles."""
+    cluster = ClusterSpec.build([("A100", 2), ("3090", 2), ("P100", 2)])
+    plan = search(cluster, LLAMA_13B,
+                  RequestDistribution(batch=8, decode_ctx=512))
+    assert plan.primary_workers
+    cfg = smoke_config("qwen3-14b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    primary = [d.device_id for d in plan.primary_workers]
+    pool = [d.device_id for d in plan.attention_workers] or \
+        [cluster.devices[-1].device_id]
+    eng = InferenceEngine(cfg, params, cluster, primary_ids=primary,
+                          pool_ids=pool,
+                          engine_cfg=EngineConfig(max_batch=4, max_seq=64))
+    rng = np.random.default_rng(1)
+    for i in range(4):
+        eng.submit(Request(rid=i,
+                           prompt=[int(x) for x in
+                                   rng.integers(0, cfg.vocab_size, 8)],
+                           max_new_tokens=5))
+    eng.run_until_drained(200)
+    assert len(eng.finished) == 4
+    for r in eng.finished:
+        assert len(r.output) == 5
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+    eng.kv.check_invariants()
+
+
+def test_sim_saturates_gracefully():
+    """At very high rates the simulator must terminate and queue, not hang."""
+    sys_ = HetisSystem(LLAMA_13B, ClusterSpec.paper_testbed())
+    trace = make_trace("sharegpt", rate=50.0, duration=3.0, seed=0)
+    res = simulate(sys_, trace, "sharegpt", 50.0, max_sim_seconds=30.0)
+    assert res.duration <= 31.0
+
+
+def test_dryrun_results_green_if_present():
+    """The committed dry-run artifacts must all be ok or documented skips."""
+    import json
+    import pathlib
+    res = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not res.exists() or not list(res.glob("*.json")):
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    bad = []
+    for f in res.glob("*.json"):
+        r = json.loads(f.read_text())
+        if r["status"] == "error":
+            bad.append((f.name, r.get("error", "")[:80]))
+    assert not bad, bad
