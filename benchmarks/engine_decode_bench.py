@@ -1,0 +1,105 @@
+"""Decode-path benchmark: paged fast path vs the dense reference.
+
+For each mode the same workload runs through the engine; we report
+
+  engine/decode_step_<mode>     median wall time of one engine step (us)
+  engine/h2d_per_step_<mode>    host->device bytes moved per decode step
+  engine/d2h_per_step_<mode>    device->host bytes moved per decode step
+  engine/compiles_<mode>        jit compilations of the decode function
+
+The dense path re-gathers every request's pages into a host tensor each
+step and re-uploads it (and downloads the whole written cache back); the
+paged path ships tokens + block tables only, with compile count bounded by
+the shape buckets.  ``--smoke`` shrinks the workload for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.cluster import ClusterSpec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import EngineConfig, InferenceEngine, Request
+
+
+def build_model(smoke: bool):
+    cfg = ModelConfig(name="bench", family="dense",
+                      n_layers=2 if smoke else 4,
+                      d_model=64 if smoke else 128,
+                      n_heads=4 if smoke else 8,
+                      n_kv_heads=2 if smoke else 4,
+                      d_ff=128 if smoke else 256,
+                      vocab_size=128 if smoke else 512,
+                      head_dim=16, dtype="float32", remat=False,
+                      scan_q_chunk=64, loss_chunk=64)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def run_mode(mode: str, cfg, params, prompts, new_tokens: int):
+    cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
+    eng = InferenceEngine(cfg, params, cl, primary_ids=[0], pool_ids=[1, 2],
+                          engine_cfg=EngineConfig(
+                              max_batch=8, max_seq=128, decode_mode=mode))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
+    step_times = []
+    h2d0 = d2h0 = 0.0
+    decode_steps = 0
+    while eng.queue or eng.running:
+        t0 = time.perf_counter()
+        eng.step()
+        dt = (time.perf_counter() - t0) * 1e6
+        if eng.metrics["h2d_bytes"] > h2d0:      # a decode batch ran
+            step_times.append(dt)
+            decode_steps += 1
+        h2d0, d2h0 = eng.metrics["h2d_bytes"], eng.metrics["d2h_bytes"]
+        if eng.metrics["steps"] > 2000:
+            break
+    # drop the first (compile-laden) step; median of the rest
+    warm = sorted(step_times[1:]) or step_times
+    med = warm[len(warm) // 2]
+    try:
+        compiles = int(eng._paged_fn._cache_size()) if mode == "paged" \
+            else int(eng._decode_fn._cache_size())
+    except Exception:
+        compiles = -1
+    n = max(1, decode_steps)
+    emit(f"engine/decode_step_{mode}", med,
+         f"decode_steps={decode_steps} finished={len(eng.finished)}")
+    emit(f"engine/h2d_per_step_{mode}", eng.metrics["h2d_bytes"] / n,
+         "bytes")
+    emit(f"engine/d2h_per_step_{mode}", eng.metrics["d2h_bytes"] / n,
+         "bytes")
+    emit(f"engine/compiles_{mode}", compiles,
+         f"bucket_bound={eng.bucket_count() if mode == 'paged' else 'n/a'}")
+    return med
+
+
+def main(argv=()) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few tokens for CI")
+    args = ap.parse_args(list(argv))
+    cfg, params = build_model(args.smoke)
+    rng = np.random.default_rng(0)
+    n_req = 4 if args.smoke else 8
+    new_tokens = 4 if args.smoke else 24
+    prompts = [[int(x) for x in rng.integers(0, cfg.vocab_size,
+                                             rng.integers(6, 16))]
+               for _ in range(n_req)]
+    paged = run_mode("paged", cfg, params, prompts, new_tokens)
+    dense = run_mode("dense", cfg, params, prompts, new_tokens)
+    emit("engine/decode_speedup_dense_over_paged", dense / max(paged, 1e-9),
+         "ratio (interpret-mode CPU; architectural, not TPU-grade)")
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

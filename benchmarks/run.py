@@ -25,6 +25,7 @@ MODULES = [
     "fig16_robustness",
     "search_overhead",
     "kernels_bench",
+    "engine_decode_bench",
     "roofline_report",
 ]
 

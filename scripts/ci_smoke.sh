@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification + perf-bench smoke: the benches run in CI so the
+# decode fast path and kernel wrappers cannot silently rot.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== kernels bench (smoke) =="
+python -m benchmarks.kernels_bench --smoke
+
+echo "== engine decode bench (smoke) =="
+python -m benchmarks.engine_decode_bench --smoke

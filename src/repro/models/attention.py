@@ -137,6 +137,43 @@ def gqa_decode_carry(cfg, p, x, k_full, v_full, idx, pos: jax.Array, window=0
     return logical(out, "batch", "seq", "embed"), k_full, v_full
 
 
+def gqa_decode_paged(cfg, p, x, kpool, vpool, idx, block_tables, lengths,
+                     write_slot, write_off, pos: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode against the device-resident head-granular paged pool.
+
+    The new token's K/V is scattered straight into this layer's pool slice
+    (B*Hkv*dh elements touch memory — no dense cache materialization), then
+    the Pallas paged-attention kernel consumes the pool through the block
+    tables.  Padded batch rows carry write_slot == sink and lengths == 0, so
+    their writes land in the sink slot and their outputs are discarded.
+
+    x:            (B, 1, d) new-token hidden states
+    kpool/vpool:  (L, slots, page, dh) full stacked pools (scan carry)
+    idx:          layer index into the pool's leading axis
+    block_tables: (B, Hkv, max_pages) int32 slot ids
+    lengths:      (B,) int32 valid tokens INCLUDING the one written here
+    write_slot:   (B, Hkv) int32 slot for the new token's page
+    write_off:    (B,) int32 offset of the new token within its page
+    pos:          (B,) int32 absolute position of the new token (RoPE)
+    """
+    from repro.kernels.paged_attention import paged_attention
+    B = x.shape[0]
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _gqa_qkv(cfg, p, x, pos[:, None])
+    cdt = kpool.dtype                        # may be f8 (kv_cache_dtype)
+    kpool = kpool.at[idx, write_slot, write_off[:, None]].set(
+        k[:, 0].astype(cdt))
+    vpool = vpool.at[idx, write_slot, write_off[:, None]].set(
+        v[:, 0].astype(cdt))
+    # group-major head fold (H = Hkv * r), matching attention_core
+    qg = q[:, 0].reshape(B, Hkv, H // Hkv, dh)
+    out = paged_attention(qg, kpool[idx].astype(q.dtype),
+                          vpool[idx].astype(q.dtype), block_tables, lengths)
+    out = out.reshape(B, 1, H * dh) @ p["wo"]
+    return logical(out, "batch", "seq", "embed"), kpool, vpool
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V3)
 # ---------------------------------------------------------------------------

@@ -417,6 +417,66 @@ def _apply_decode_carry(cfg: ModelConfig, kind: str, p: Params,
     return x, caches
 
 
+def supports_paged_decode(cfg: ModelConfig) -> bool:
+    """Can decode run against the head-granular paged pool?  Pure-GQA
+    full-attention stacks only; MLA (latent cache), SSM/hybrid (recurrent
+    state), xLSTM and sliding-window configs use the dense reference path."""
+    return (cfg.attn_type == "gqa" and not cfg.xlstm_pattern
+            and not cfg.ssm_state and not cfg.sliding_window
+            and not cfg.is_encoder_only)
+
+
+def paged_decode_step(cfg: ModelConfig, params: Params,
+                      kpool: jax.Array, vpool: jax.Array,
+                      block_tables: jax.Array, lengths: jax.Array,
+                      write_slot: jax.Array, write_off: jax.Array,
+                      tokens: jax.Array, pos: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against the device-resident paged KV pool.
+
+    The dense QKV/MLP projections run exactly as in ``decode_step``'s
+    "carry" variant, but attention consumes ``(B, Hkv, max_pages)`` block
+    tables through the Pallas paged kernel instead of a gathered dense
+    cache: the pools are carried through the layer scan and updated with
+    one (B*Hkv)-element scatter per layer.  Returns (logits, kpool, vpool);
+    the caller re-installs the pools, so the cache never leaves the device.
+
+    tokens: (B, 1) int32; pos: (B,) absolute position of each new token;
+    other operands documented in ``attn.gqa_decode_paged``.
+    """
+    assert supports_paged_decode(cfg), "config not supported by paged decode"
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = logical(x, "batch", "seq", "embed")
+    layer0 = 0
+    for gi, (kind, n, _win) in enumerate(layer_groups(cfg)):
+
+        def body(carry, layer_in, _kind=kind):
+            xx, kp, vp = carry
+            p_l, idx = layer_in
+            xn = rmsnorm(xx, p_l["attn_norm"], cfg.norm_eps)
+            a_out, kp, vp = attn.gqa_decode_paged(
+                cfg, p_l["attn"], xn, kp, vp, idx, block_tables, lengths,
+                write_slot, write_off, pos)
+            xx = xx + a_out
+            if "mlp" in p_l:
+                xn = rmsnorm(xx, p_l["mlp_norm"], cfg.norm_eps)
+                if _kind.endswith("moe"):
+                    m_out, _ = mlp_mod.moe_apply(cfg, p_l["mlp"], xn)
+                else:
+                    m_out = mlp_mod.mlp_apply(cfg, p_l["mlp"], xn)
+                xx = xx + m_out
+            return (xx, kp, vp), None
+
+        (x, kpool, vpool), _ = jax.lax.scan(
+            body, (x, kpool, vpool),
+            (params["groups"][gi], layer0 + jnp.arange(n)))
+        layer0 += n
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0] @ _lm_head(cfg, params)).astype(jnp.float32)
+    logits = logical(logits, "batch", "vocab")
+    return logits, kpool, vpool
+
+
 def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
                 tokens: jax.Array) -> Tuple[jax.Array, Cache]:
     """One decode step for all sequences.  tokens: (B, 1) int32.

@@ -5,9 +5,9 @@ The engine is the paper's full control loop on real JAX compute:
   admit   — new requests get head placements from the Dispatcher LP (Eq 7);
             their prompt K/V is computed with a real prefill and stored into
             the head-granular paged pool on the assigned devices;
-  decode  — one token per running request per step; K/V gathered from pages
-            (the Pallas paged-attention kernel replaces gather+attend on
-            TPU), cache grown via grow_context (Eq 8 bookkeeping);
+  decode  — one token per running request per step; K/V consumed in place
+            from the paged pool by the Pallas paged-attention kernel, cache
+            grown via grow_context (Eq 8 bookkeeping);
   balance — Θ-triggered re-dispatching and device-local LIFO handling of
             memory exhaustion (§5.3), with migration bytes scheduled by the
             Hauler into compute-overlap windows;
@@ -16,13 +16,37 @@ The engine is the paper's full control loop on real JAX compute:
             TPOT / throughput are measured as the paper measures them, while
             the token stream itself is exact JAX compute.
 
-Token-exactness is tested against a plain dense decode (tests/test_engine).
+Paged decode fast path (``EngineConfig.decode_mode == "paged"``, default):
+
+  * The K/V pools are device-resident JAX arrays (``PagedHeadCache``); the
+    engine hands ``transformer.paged_decode_step`` the pools plus
+    ``(B, Hkv, max_pages)`` block tables, per-request lengths and the
+    (slot, offset) of each new token.  Dense QKV/MLP projections and the
+    Pallas paged-attention kernel run inside ONE jitted function; the new
+    token's K/V is scattered into the pool per layer — cache contents never
+    cross the host boundary (h2d traffic is tokens + tables, a few KB).
+  * Shapes are bucketed: the batch and the block-table page axis are padded
+    to the next power of two, so jit compilation count is bounded by
+    ``bucket_count()`` (≈ log²) instead of growing with every new
+    (batch, context) combination.  Padded rows write to the pool's sink
+    slot and carry length 0 — never read, outputs discarded.
+  * The dense reference path (``decode_mode == "dense"``) gathers pages
+    into a host-side dense cache each step (``gather_dense``) and re-uploads
+    it — kept as the token-exactness oracle, for MLA/ssm configs, and for
+    the before/after record in ``benchmarks/engine_decode_bench.py``.
+
+Per-step host<->device byte counts for both paths accumulate in
+``metrics["h2d_bytes"] / metrics["d2h_bytes"]``.
+
+Token-exactness is tested against a plain dense decode (tests/test_engine,
+tests/test_engine_paged — the latter interleaves migration/preemption).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +68,14 @@ from repro.serving.kvcache import PagedHeadCache
 from repro.serving.request import Request, RequestState
 
 
+def _bucket(n: int, lo: int = 1) -> int:
+    """Smallest power of two >= n (>= lo)."""
+    b = max(1, lo)
+    while b < n:
+        b *= 2
+    return b
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 32
@@ -51,13 +83,18 @@ class EngineConfig:
     theta: float = 0.5              # re-dispatch trigger (paper Θ)
     cache_gb_per_device: Optional[Dict[int, float]] = None
     max_seq: int = 512
+    # "paged": device-resident pools + Pallas kernel + bucketed jit;
+    # "dense": gather_dense reference path (token-exactness oracle).
+    decode_mode: str = "paged"
 
 
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, cluster: ClusterSpec,
                  primary_ids: Sequence[int], pool_ids: Sequence[int],
-                 engine_cfg: EngineConfig = EngineConfig(),
+                 engine_cfg: Optional[EngineConfig] = None,
                  rng: int = 0):
+        engine_cfg = EngineConfig() if engine_cfg is None \
+            else engine_cfg
         self.cfg = cfg
         self.params = params
         self.cluster = cluster
@@ -69,6 +106,12 @@ class InferenceEngine:
         self.workers: List[WorkerState] = []
         slot_bytes = (2 * cfg.n_layers * engine_cfg.page_size * cfg.head_dim
                       * 4)  # fp32 pool on CPU
+        # physical pool only needs to back max_batch concurrent sequences
+        # at max_seq, even if every head group lands on one device —
+        # capacity beyond that is dispatcher bookkeeping, not pool memory
+        # (the pools are real device allocations now, not lazy zeros).
+        pages_per_seq = -(-engine_cfg.max_seq // engine_cfg.page_size)
+        pool_cap = engine_cfg.max_batch * cfg.n_kv_heads * pages_per_seq
         self.device_slots: Dict[int, int] = {}
         for did in list(primary_ids) + list(pool_ids):
             d = devs[did]
@@ -80,27 +123,54 @@ class InferenceEngine:
             cap_bytes = cap_gb * 1e9
             self.workers.append(WorkerState(did, attn_model, xfer,
                                             capacity_bytes=cap_bytes))
-            self.device_slots[did] = max(1, int(cap_bytes
-                                                / max(1, slot_bytes)
-                                                / max(1, cfg.n_kv_heads)))
+            by_mem = max(1, int(cap_bytes / max(1, slot_bytes)
+                                / max(1, cfg.n_kv_heads)))
+            self.device_slots[did] = min(by_mem, pool_cap)
         self.primary_ids = list(primary_ids)
 
         self.kv = PagedHeadCache(cfg, self.device_slots,
                                  page_size=engine_cfg.page_size)
         self.hauler = MigrationScheduler({})
 
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
         self.running: List[Request] = []
         self.attn_reqs: Dict[int, AttnRequest] = {}
         self.finished: List[Request] = []
         self.clock = 0.0
         self.metrics = {"migrated_bytes": 0.0, "evictions": 0,
-                        "redispatches": 0, "steps": 0}
+                        "redispatches": 0, "steps": 0,
+                        "h2d_bytes": 0.0, "d2h_bytes": 0.0}
 
+        self.use_paged = (engine_cfg.decode_mode == "paged"
+                          and T.supports_paged_decode(cfg))
         self._decode_fn = jax.jit(
             lambda p, c, t: T.decode_step(cfg, p, c, t))
         self._prefill_fn = jax.jit(
             lambda p, b: T.prefill(cfg, p, b, max_seq=engine_cfg.max_seq))
+        # buffer donation lets XLA update the pools in place; CPU does not
+        # support donation (harmless, but noisy), so only donate off-CPU.
+        donate = (1, 2) if jax.default_backend() != "cpu" else ()
+        self._paged_fn = jax.jit(
+            lambda p, kp, vp, bt, ln, ws, wo, t, pos: T.paged_decode_step(
+                cfg, p, kp, vp, bt, ln, ws, wo, t, pos),
+            donate_argnums=donate)
+        self._decode_shapes: Set[Tuple[int, int]] = set()
+
+    # -------------------------------------------------------- compile bounds
+    def bucket_count(self) -> int:
+        """Upper bound on paged-decode jit compilations: one per
+        (batch-bucket, pages-bucket) pair."""
+        b_buckets = _bucket(self.ecfg.max_batch).bit_length()
+        pages = -(-self.ecfg.max_seq // self.ecfg.page_size)
+        p_buckets = _bucket(pages).bit_length()
+        return b_buckets * p_buckets
+
+    def decode_compile_count(self) -> int:
+        """Actual number of paged-decode compilations so far."""
+        try:
+            return int(self._paged_fn._cache_size())
+        except Exception:               # jax without _cache_size
+            return len(self._decode_shapes)
 
     # ------------------------------------------------------------------ admit
     def submit(self, req: Request) -> None:
@@ -117,7 +187,7 @@ class InferenceEngine:
                     self.clock = req.arrival
                 else:
                     break
-            ar = AttnRequest(rid=req.rid, ctx_len=len(req.prompt),
+            ar = AttnRequest(rid=req.rid, ctx_len=req.ctx_len,
                              n_heads=self.cfg.n_heads,
                              group_ratio=self.cfg.gqa_ratio,
                              head_dim=self.cfg.head_dim,
@@ -134,7 +204,7 @@ class InferenceEngine:
                 release_request(self.workers, ar)
                 del self.attn_reqs[req.rid]
                 break
-            self.queue.pop(0)
+            self.queue.popleft()
             admitted.append(req)
         return admitted
 
@@ -148,43 +218,119 @@ class InferenceEngine:
         for dev, ngroups in self._groups_by_device(req.placement).items():
             for _ in range(ngroups):
                 if not self.kv.ensure_capacity(req.rid, g, dev,
-                                               len(req.prompt)):
+                                               req.ctx_len):
                     self.kv.release(req.rid)
                     return False
-                self.kv.lengths[(req.rid, g)] = len(req.prompt)
+                self.kv.lengths[(req.rid, g)] = req.ctx_len
                 g += 1
         return g == self.cfg.n_kv_heads
 
     # ---------------------------------------------------------------- prefill
     def _prefill(self, req: Request) -> None:
-        cfg = self.cfg
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        # a PREEMPTED request resumes with prompt + generated tokens as the
+        # prefill input (teacher-forcing: identical K/V and next-token
+        # logits to the decode steps it replays, so resumption stays exact)
+        tokens = jnp.asarray(req.prompt + req.output, jnp.int32)[None]
+        ctx = int(tokens.shape[1])
         logits, cache = self._prefill_fn(self.params, {"tokens": tokens})
-        # store prompt K/V into pages, per head group (device-resident)
-        kview = np.asarray(cache["groups"][0]["k"], np.float32)  # (L,1,S,H,dh)
-        vview = np.asarray(cache["groups"][0]["v"], np.float32)
-        ctx = len(req.prompt)
-        for grp in range(cfg.n_kv_heads):
-            self.kv.store_prompt(req.rid, grp,
-                                 kview[:, 0, :ctx, grp],
-                                 vview[:, 0, :ctx, grp])
+        # bulk-store prompt K/V for all head groups: one device scatter,
+        # no host round-trip of the cache contents
+        kv = cache["groups"][0]
+        self.kv.store_prompt_request(req.rid, kv["k"][:, 0, :ctx],
+                                     kv["v"][:, 0, :ctx])
         first = int(np.argmax(np.asarray(logits[0])))
         req.output.append(first)
         # one token appended to every group's cache next decode step
         req.state = RequestState.RUNNING
-        req.ttft = self.clock - req.arrival
+        if req.ttft is None:
+            req.ttft = self.clock - req.arrival
         self.running.append(req)
+        if req.done:        # max_new_tokens == 1, or resume filled the last
+            self._finish(req)
 
     # ----------------------------------------------------------------- decode
     def _decode_batch(self) -> None:
-        cfg = self.cfg
         reqs = [r for r in self.running if not r.done]
         if not reqs:
             return
+        if self.use_paged:
+            self._decode_batch_paged(reqs)
+        else:
+            self._decode_batch_dense(reqs)
+
+    def _decode_batch_paged(self, reqs: List[Request]) -> None:
+        """Fast path: block tables + device-resident pools, no gather."""
+        cfg = self.cfg
+        Hkv, page = cfg.n_kv_heads, self.kv.page
+        # reserve page room for this step's token in every group chain;
+        # exhaustion triggers §5.3 handling, which may preempt requests
+        # (possibly the one being reserved) out of this step's batch
+        active: List[Request] = []
+        for r in reqs:
+            if r not in self.running:
+                continue                       # evicted by a prior handler
+            ok = True
+            for grp, dev in self._group_devices(r):
+                n = r.ctx_len - 1              # tokens stored so far
+                if self.kv.ensure_capacity(r.rid, grp, dev, n + 1):
+                    continue
+                self._on_memory_exhausted(dev)
+                if r not in self.running or \
+                        not self.kv.ensure_capacity(r.rid, grp, dev, n + 1):
+                    ok = False
+                    break
+            if ok and r in self.running:
+                active.append(r)
+        active = [r for r in active if r in self.running]
+        if not active:
+            return
+        B = len(active)
+        Bp = _bucket(B)
+        maxp = max(-(-r.ctx_len // page) for r in active)
+        Pp = _bucket(maxp)
+        sink = self.kv.sink
+        tables = np.full((Bp, Hkv, Pp), sink, np.int32)
+        lengths = np.zeros((Bp,), np.int32)
+        wslot = np.full((Bp, Hkv), sink, np.int32)
+        woff = np.zeros((Bp,), np.int32)
+        pos = np.zeros((Bp,), np.int32)
+        toks = np.zeros((Bp, 1), np.int32)
+        for i, r in enumerate(active):
+            p_new = r.ctx_len - 1
+            for g in range(Hkv):
+                chain = self.kv.block_table(r.rid, g)
+                tables[i, g, :len(chain)] = chain
+                wslot[i, g] = chain[p_new // page]
+            lengths[i] = p_new + 1
+            woff[i] = p_new % page
+            pos[i] = p_new
+            toks[i, 0] = r.output[-1]
+        self._decode_shapes.add((Bp, Pp))
+        logits, self.kv.kpool, self.kv.vpool = self._paged_fn(
+            self.params, self.kv.kpool, self.kv.vpool,
+            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(wslot),
+            jnp.asarray(woff), jnp.asarray(toks), jnp.asarray(pos))
+        self.metrics["h2d_bytes"] += (tables.nbytes + lengths.nbytes
+                                      + wslot.nbytes + woff.nbytes
+                                      + pos.nbytes + toks.nbytes)
+        nxt = np.asarray(jnp.argmax(logits[:B], axis=-1), np.int32)
+        self.metrics["d2h_bytes"] += logits.nbytes
+        for r in active:
+            # the reservation above already advanced kv.lengths; the jitted
+            # step scattered the token K/V into those pages on device
+            grow_context(self.workers, self.attn_reqs[r.rid], 1)
+        for i, r in enumerate(active):
+            r.output.append(int(nxt[i]))
+            if r.done:
+                self._finish(r)
+
+    def _decode_batch_dense(self, reqs: List[Request]) -> None:
+        """Reference path: gather pages into a dense host-side cache,
+        upload, decode, download the written K/V and re-page it."""
+        cfg = self.cfg
         B = len(reqs)
         max_len = max(r.ctx_len + 1 for r in reqs)
         max_len = min(max_len, self.ecfg.max_seq)
-        # gather paged K/V into the dense batch view
         L, Hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
         K = np.zeros((L, B, max_len, Hkv, dh), np.float32)
         V = np.zeros_like(K)
@@ -198,26 +344,27 @@ class InferenceEngine:
             toks[i, 0] = r.output[-1]       # last generated token
         cache = {"groups": [{"k": jnp.asarray(K), "v": jnp.asarray(V)}],
                  "pos": jnp.asarray(pos)}
+        self.metrics["h2d_bytes"] += (K.nbytes + V.nbytes + pos.nbytes
+                                      + toks.nbytes)
         logits, new_cache = self._decode_fn(self.params, cache,
                                             jnp.asarray(toks))
         nk = np.asarray(new_cache["groups"][0]["k"])
         nv = np.asarray(new_cache["groups"][0]["v"])
+        self.metrics["d2h_bytes"] += (nk.nbytes + nv.nbytes
+                                      + np.asarray(logits).nbytes)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for i, r in enumerate(reqs):
             p = int(pos[i])
             ar = self.attn_reqs[r.rid]
             # store the token K/V written by decode into pages + grow
-            okdev = True
             for grp, dev in self._group_devices(r):
                 ok = self.kv.append_token(
                     r.rid, grp, dev, (nk[:, i, p, grp], nv[:, i, p, grp]))
-                okdev = okdev and ok
                 if not ok:
                     self._on_memory_exhausted(dev)
-                    ok = self.kv.append_token(
+                    self.kv.append_token(
                         r.rid, grp, dev,
                         (nk[:, i, p, grp], nv[:, i, p, grp]))
-                    okdev = okdev and ok
             grow_context(self.workers, ar, 1)
             r.output.append(int(nxt[i]))
             if r.done:
@@ -252,13 +399,18 @@ class InferenceEngine:
             self.metrics["redispatches"] += 1
         for ar in evicted:
             req = next(r for r in self.running if r.rid == ar.rid)
-            self.kv.release(req.rid)
-            req.state = RequestState.PREEMPTED
-            req.placement = {}
-            self.running.remove(req)
-            self.attn_reqs.pop(req.rid, None)
-            self.queue.insert(0, req)
-            self.metrics["evictions"] += 1
+            self._preempt(req)
+
+    def _preempt(self, req: Request) -> None:
+        """Device-local LIFO eviction (§5.3): release the request's pages
+        and requeue it at the front; it resumes via replay prefill."""
+        self.kv.release(req.rid)
+        req.state = RequestState.PREEMPTED
+        req.placement = {}
+        self.running.remove(req)
+        self.attn_reqs.pop(req.rid, None)
+        self.queue.appendleft(req)
+        self.metrics["evictions"] += 1
 
     def _apply_migration(self, rid: int, new_placement: Dict[int, int]
                          ) -> None:

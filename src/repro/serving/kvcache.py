@@ -3,21 +3,34 @@
 vLLM pages cache at (sequence, block) granularity; Hetis splits further on
 the head dimension so different head groups of ONE request can live on
 different devices.  A block here is (kv-head-group, page of tokens): the
-physical pool stores (slot, layer, page_size, head_dim) for K and V, and the
-block table maps (request, group, page_index) -> (device, slot).
+physical pool stores (layer, slot, page_size, head_dim) for K and V, and
+the block table maps (request, group, page_index) -> (device, slot).
 
-The pool is partitioned into per-device slot ranges (the CPU engine holds
-one physical array; device partitions are slot intervals — on a real
-cluster each partition is device-local memory).  ``gather_dense`` fetches a
-request's pages back into the dense (L, ctx, Hkv, dh) view for compute; the
-Pallas paged-attention kernel consumes the same block tables on TPU.
+The pool is **device-resident**: K/V live as JAX arrays and stay on the
+accelerator across decode steps.  All writes are batched ``.at[]`` scatters
+(one XLA scatter per prompt store / per decode step), so the engine's fast
+path never round-trips cache contents through the host — the Pallas
+paged-attention kernel consumes the pools plus ``(B, Hkv, max_pages)``
+block tables directly.  Layout is layer-major ``(L, slots, page, dh)`` so a
+``lax.scan`` over layers carries the pool and slices one contiguous layer
+per step.
+
+One extra ``sink`` slot (index ``num_slots``) pads bucketed batches: rows
+past the true batch size write their garbage token K/V there, and padded
+block-table entries point at it; the kernel's length mask guarantees it is
+never read into a real output.
+
+``gather_dense`` reassembles a request's pages into the dense
+``(L, ctx, Hkv, dh)`` view — the host-side reference path the fast path
+replaces (kept as the token-exactness oracle and for MLA/ssm configs).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
@@ -49,8 +62,11 @@ class PagedHeadCache:
         self.page = page_size
         total = sum(device_slots.values())
         L, dh = cfg.n_layers, cfg.head_dim
-        self.kpool = np.zeros((total, L, page_size, dh), dtype)
-        self.vpool = np.zeros((total, L, page_size, dh), dtype)
+        # +1: sink slot for padded batch rows (never read through a length
+        # mask, may be scribbled on by bucketed decode steps)
+        self.sink = total
+        self.kpool = jnp.zeros((L, total + 1, page_size, dh), dtype)
+        self.vpool = jnp.zeros((L, total + 1, page_size, dh), dtype)
         self.partitions: Dict[int, DevicePartition] = {}
         start = 0
         for dev, n in device_slots.items():
@@ -68,7 +84,7 @@ class PagedHeadCache:
 
     def bytes_per_slot(self) -> int:
         return int(2 * self.cfg.n_layers * self.page * self.cfg.head_dim
-                   * self.kpool.itemsize)
+                   * self.kpool.dtype.itemsize)
 
     def free_slots(self, device_id: int) -> int:
         return self.partitions[device_id].free
@@ -107,39 +123,64 @@ class PagedHeadCache:
         """k, v: (L, dh) for this group at position pos."""
         dev_slot = self.tables[(rid, group)][pos // self.page]
         off = pos % self.page
-        self.kpool[dev_slot[1], :, off] = k
-        self.vpool[dev_slot[1], :, off] = v
+        cdt = self.kpool.dtype
+        self.kpool = self.kpool.at[:, dev_slot[1], off].set(
+            jnp.asarray(k, cdt))
+        self.vpool = self.vpool.at[:, dev_slot[1], off].set(
+            jnp.asarray(v, cdt))
 
     def store_prompt(self, rid: int, group: int, k: np.ndarray,
                      v: np.ndarray) -> None:
-        """k, v: (L, ctx, dh) — bulk store after prefill."""
+        """k, v: (L, ctx, dh) — bulk store after prefill; ONE scatter."""
         ctx = k.shape[1]
+        slots, offs = self._scatter_indices(rid, group, ctx)
+        cdt = self.kpool.dtype
+        self.kpool = self.kpool.at[:, slots, offs].set(jnp.asarray(k, cdt))
+        self.vpool = self.vpool.at[:, slots, offs].set(jnp.asarray(v, cdt))
+
+    def store_prompt_request(self, rid: int, k, v) -> None:
+        """Bulk store a whole request's prompt K/V for ALL head groups with
+        one scatter per pool.  k, v: (L, ctx, Hkv, dh) — the layout emitted
+        by ``transformer.prefill`` (device array; no host round-trip)."""
+        ctx, Hkv = k.shape[1], k.shape[2]
+        slots = np.empty((Hkv, ctx), np.int32)
+        offs = np.empty((Hkv, ctx), np.int32)
+        for g in range(Hkv):
+            s, o = self._scatter_indices(rid, g, ctx)
+            slots[g], offs[g] = s, o
+        cdt = self.kpool.dtype
+        kj = jnp.transpose(jnp.asarray(k, cdt), (0, 2, 1, 3))  # (L,Hkv,ctx,dh)
+        vj = jnp.transpose(jnp.asarray(v, cdt), (0, 2, 1, 3))
+        self.kpool = self.kpool.at[:, slots, offs].set(kj)
+        self.vpool = self.vpool.at[:, slots, offs].set(vj)
+
+    def _scatter_indices(self, rid: int, group: int, ctx: int
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """(slot, offset) per token position for one group chain."""
         chain = self.tables[(rid, group)]
-        for p in range(-(-ctx // self.page)):
-            lo, hi = p * self.page, min((p + 1) * self.page, ctx)
-            self.kpool[chain[p][1], :, :hi - lo] = k[:, lo:hi]
-            self.vpool[chain[p][1], :, :hi - lo] = v[:, lo:hi]
+        t = np.arange(ctx)
+        chain_slots = np.asarray([s for _, s in chain], np.int32)
+        return chain_slots[t // self.page], (t % self.page).astype(np.int32)
 
     # -- retrieval ---------------------------------------------------------------
     def gather_dense(self, rid: int, max_len: int) -> Tuple[np.ndarray,
                                                             np.ndarray]:
-        """Reassemble (L, max_len, Hkv, dh) dense K/V from pages (what the
-        Pallas kernel avoids doing on TPU)."""
+        """Reassemble (L, max_len, Hkv, dh) dense K/V from pages — the
+        host-side reference path the paged fast path replaces."""
         cfg = self.cfg
         L, dh = cfg.n_layers, cfg.head_dim
-        K = np.zeros((L, max_len, cfg.n_kv_heads, dh), self.kpool.dtype)
+        kp = np.asarray(self.kpool)
+        vp = np.asarray(self.vpool)
+        K = np.zeros((L, max_len, cfg.n_kv_heads, dh), kp.dtype)
         V = np.zeros_like(K)
         for g in range(cfg.n_kv_heads):
             key = (rid, g)
-            chain = self.tables.get(key, [])
-            n = self.lengths.get(key, 0)
-            for p, (_, slot) in enumerate(chain):
-                lo = p * self.page
-                hi = min(lo + self.page, n, max_len)
-                if hi <= lo:
-                    break
-                K[:, lo:hi, g] = self.kpool[slot, :, :hi - lo]
-                V[:, lo:hi, g] = self.vpool[slot, :, :hi - lo]
+            n = min(self.lengths.get(key, 0), max_len)
+            if n <= 0:
+                continue
+            slots, offs = self._scatter_indices(rid, g, n)
+            K[:, :n, g] = kp[:, slots, offs]
+            V[:, :n, g] = vp[:, slots, offs]
         return K, V
 
     def block_table(self, rid: int, group: int) -> List[int]:
@@ -168,20 +209,24 @@ class PagedHeadCache:
         moved = 0
         nbytes = 0.0
         new_chain = []
+        src_slots: List[int] = []
+        dst_slots: List[int] = []
         for dev, slot in chain:
-            if dev == dst_device:
-                new_chain.append((dev, slot))
-                continue
-            if not dst.slots:
+            if dev == dst_device or not dst.slots:
                 new_chain.append((dev, slot))
                 continue
             nslot = dst.slots.pop()
-            self.kpool[nslot] = self.kpool[slot]
-            self.vpool[nslot] = self.vpool[slot]
+            src_slots.append(slot)
+            dst_slots.append(nslot)
             self.partitions[dev].slots.append(slot)
             new_chain.append((dst_device, nslot))
             moved += 1
             nbytes += self.bytes_per_slot()
+        if moved:
+            src = np.asarray(src_slots, np.int32)
+            dst_idx = np.asarray(dst_slots, np.int32)
+            self.kpool = self.kpool.at[:, dst_idx].set(self.kpool[:, src])
+            self.vpool = self.vpool.at[:, dst_idx].set(self.vpool[:, src])
         self.tables[key] = new_chain
         return moved, nbytes
 
@@ -191,6 +236,7 @@ class PagedHeadCache:
         for key, chain in self.tables.items():
             for dev, slot in chain:
                 assert slot not in used, f"slot {slot} double-booked"
+                assert slot != self.sink, "sink slot allocated"
                 used.add(slot)
         for dev, part in self.partitions.items():
             for s in part.slots:

@@ -1,0 +1,184 @@
+"""Paged decode fast path: token-exactness vs the dense reference engine
+(with migration and preemption interleaved) and the recompile guard."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import EngineConfig, InferenceEngine, Request
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                  head_dim=16, dtype="float32", remat=False,
+                  scan_q_chunk=64, loss_chunk=64)
+KEY = jax.random.PRNGKey(0)
+PARAMS = T.init_params(CFG, KEY)
+
+
+def make_engine(mode="paged", max_seq=96, cache_gb=None, max_batch=8):
+    cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
+    return InferenceEngine(CFG, PARAMS, cl, primary_ids=[0],
+                           pool_ids=[1, 2],
+                           engine_cfg=EngineConfig(
+                               max_batch=max_batch, max_seq=max_seq,
+                               cache_gb_per_device=cache_gb,
+                               decode_mode=mode))
+
+
+def ref_decode(prompt, n, max_seq=96):
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, cache = T.prefill(CFG, PARAMS, {"tokens": toks},
+                              max_seq=max_seq)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n - 1):
+        l2, cache = T.decode_step(CFG, PARAMS, cache,
+                                  jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(l2[0])))
+    return out
+
+
+def random_prompts(n, seed=0, lo=4, hi=12):
+    rng = np.random.default_rng(seed)
+    return [[int(x) for x in rng.integers(0, 128, rng.integers(lo, hi))]
+            for _ in range(n)]
+
+
+def test_paged_decode_step_matches_dense_decode_step():
+    """One jitted paged step == decode_step on the same cache state."""
+    from repro.serving.kvcache import PagedHeadCache
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6]
+    ctx = len(prompt)
+    max_seq = 32
+    logits0, cache = T.prefill(CFG, PARAMS,
+                               {"tokens": jnp.asarray(prompt, jnp.int32)[None]},
+                               max_seq=max_seq)
+    tok = int(jnp.argmax(logits0[0]))
+    ref_logits, _ = T.decode_step(CFG, PARAMS, cache,
+                                  jnp.asarray([[tok]], jnp.int32))
+
+    page = 4
+    kv = PagedHeadCache(CFG, {0: 8, 1: 8}, page_size=page)
+    for g in range(CFG.n_kv_heads):
+        kv.ensure_capacity(0, g, g % 2, ctx + 1)
+        kv.lengths[(0, g)] = ctx
+    kv.store_prompt_request(0, cache["groups"][0]["k"][:, 0, :ctx],
+                            cache["groups"][0]["v"][:, 0, :ctx])
+    maxp = -(-(ctx + 1) // page)
+    tables = np.full((1, CFG.n_kv_heads, maxp), kv.sink, np.int32)
+    wslot = np.zeros((1, CFG.n_kv_heads), np.int32)
+    for g in range(CFG.n_kv_heads):
+        chain = kv.block_table(0, g)
+        tables[0, g, :len(chain)] = chain
+        wslot[0, g] = chain[ctx // page]
+    logits, kp, vp = T.paged_decode_step(
+        CFG, PARAMS, kv.kpool, kv.vpool, jnp.asarray(tables),
+        jnp.asarray([ctx + 1], jnp.int32), jnp.asarray(wslot),
+        jnp.asarray([ctx % page], jnp.int32),
+        jnp.asarray([[tok]], jnp.int32), jnp.asarray([ctx], jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_engine_token_exact_vs_dense_engine():
+    prompts = random_prompts(5)
+    outs = {}
+    for mode in ("paged", "dense"):
+        eng = make_engine(mode)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        eng.run_until_drained(300)
+        assert len(eng.finished) == 5
+        eng.kv.check_invariants()
+        outs[mode] = {r.rid: r.output for r in eng.finished}
+    assert outs["paged"] == outs["dense"]
+    for i, p in enumerate(prompts):
+        assert outs["paged"][i] == ref_decode(p, 6)
+
+
+def test_paged_no_gather_dense_on_hot_path(monkeypatch):
+    eng = make_engine("paged")
+    assert eng.use_paged
+
+    def boom(*a, **k):
+        raise AssertionError("gather_dense called on the paged hot path")
+
+    monkeypatch.setattr(eng.kv, "gather_dense", boom)
+    for i, p in enumerate(random_prompts(3)):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+    eng.run_until_drained(200)
+    assert len(eng.finished) == 3
+
+
+def test_paged_exact_with_migration_interleaved():
+    eng = make_engine("paged")
+    for i, p in enumerate(random_prompts(4, seed=1)):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=8))
+    eng.step()
+    eng.step()
+    # force-migrate every running request's head groups onto one device
+    moved = 0
+    for r in list(eng.running):
+        eng._apply_migration(r.rid, {1: CFG.n_heads})
+        for g in range(CFG.n_kv_heads):
+            assert all(dev == 1 for dev, _ in eng.kv.tables[(r.rid, g)])
+        moved += 1
+    assert moved > 0
+    eng.kv.check_invariants()
+    eng.run_until_drained(300)
+    assert len(eng.finished) == 4
+    for r in eng.finished:
+        assert r.output == ref_decode(r.prompt, r.max_new_tokens)
+
+
+def test_paged_exact_with_preemption_interleaved():
+    # §5.3 LIFO eviction mid-run: preempted requests lose their pages and
+    # resume later via replay prefill — token streams must stay exact
+    eng = make_engine("paged")
+    prompts = random_prompts(6, seed=2, lo=8, hi=14)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=12))
+    eng.step()
+    eng.step()
+    eng.step()
+    victims = [r for r in eng.running if r.output][:2]
+    assert victims
+    for r in victims:
+        eng._preempt(r)               # drops pages + partial progress
+    eng.kv.check_invariants()
+    eng.run_until_drained(800)
+    assert len(eng.finished) == 6
+    assert eng.metrics["evictions"] >= 2
+    eng.kv.check_invariants()
+    for r in eng.finished:
+        assert r.output == ref_decode(r.prompt, r.max_new_tokens, max_seq=96)
+
+
+def test_recompile_guard_bucketed_shapes():
+    """jit compile count stays <= bucket count across a 100-step run with
+    varying batch sizes (the bucketing contract)."""
+    eng = make_engine("paged")
+    rng = np.random.default_rng(7)
+    rid = 0
+    steps = 0
+    while steps < 100:
+        # trickle arrivals so the running batch size keeps changing
+        if rid < 20 and steps % 5 == 0:
+            n = int(rng.integers(1, 4))
+            for _ in range(n):
+                eng.submit(Request(
+                    rid=rid,
+                    prompt=[int(x) for x in rng.integers(0, 128,
+                                                         rng.integers(4, 10))],
+                    max_new_tokens=int(rng.integers(3, 9))))
+                rid += 1
+        eng.step()
+        steps += 1
+    assert eng.metrics["steps"] == 100
+    assert eng.decode_compile_count() <= eng.bucket_count(), \
+        (eng.decode_compile_count(), eng.bucket_count())
+    # bucketing really was exercised by more than one shape
+    assert len(eng._decode_shapes) >= 1

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.paged_attention import paged_attention, paged_attention_ref
