@@ -14,3 +14,6 @@ python -m benchmarks.kernels_bench --smoke
 
 echo "== engine decode bench (smoke) =="
 python -m benchmarks.engine_decode_bench --smoke
+
+echo "== engine prefill bench (smoke) =="
+python -m benchmarks.engine_prefill_bench --smoke

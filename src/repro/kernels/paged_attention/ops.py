@@ -7,7 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_kernel, paged_prefill_attention_kernel)
 
 
 def _on_tpu() -> bool:
@@ -32,3 +33,28 @@ def paged_attention(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
                                   block_tables.astype(jnp.int32),
                                   lengths.astype(jnp.int32),
                                   interpret=not _on_tpu())
+
+
+@jax.jit
+def paged_prefill_attention(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
+                            block_tables: jax.Array, lengths: jax.Array,
+                            starts: jax.Array) -> jax.Array:
+    """Causal chunk attention over the head-granular paged pool (prefill).
+
+    q:            (B, Hkv, C, r, dh) — one C-token prompt chunk per sequence,
+                  queries grouped per kv head; the chunk's OWN K/V must
+                  already be scattered into the pools
+    kpool/vpool:  (num_slots, page_size, dh)
+    block_tables: (B, Hkv, max_pages) int32 — entries past the written
+                  length may be arbitrary valid ids (masked / page-skipped)
+    lengths:      (B,) int32 keys visible after the chunk's writes (0 pads)
+    starts:       (B,) int32 absolute position of each chunk's first token
+    """
+    assert q.ndim == 5 and kpool.ndim == 3 and block_tables.ndim == 3
+    B, Hkv, C, r, dh = q.shape
+    block_tables = jnp.clip(block_tables, 0, kpool.shape[0] - 1)
+    out = paged_prefill_attention_kernel(
+        q.reshape(B, Hkv, C * r, dh), kpool, vpool,
+        block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+        starts.astype(jnp.int32), r=r, interpret=not _on_tpu())
+    return out.reshape(B, Hkv, C, r, dh)

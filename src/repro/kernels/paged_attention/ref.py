@@ -37,3 +37,38 @@ def paged_attention_ref(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
     w = jnp.where(jnp.isnan(w), 0.0, w)
     out = jnp.einsum("bhrk,bhkd->bhrd", w, V.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q: jax.Array, kpool: jax.Array,
+                                vpool: jax.Array, block_tables: jax.Array,
+                                lengths: jax.Array, starts: jax.Array
+                                ) -> jax.Array:
+    """Gather pages into dense K/V, then exact causally-masked chunk
+    attention — oracle for the chunked-prefill kernel.
+
+    q:            (B, Hkv, C, r, dh) — one prompt chunk per sequence
+    kpool/vpool:  (num_slots, page, dh)
+    block_tables: (B, Hkv, max_pages) int32 slot ids
+    lengths:      (B,) int32 keys visible after the chunk's writes (0 pads)
+    starts:       (B,) int32 absolute position of q[:, :, 0]
+    returns       (B, Hkv, C, r, dh)
+    """
+    B, Hkv, C, r, dh = q.shape
+    page = kpool.shape[1]
+    max_pages = block_tables.shape[-1]
+    S = max_pages * page
+
+    K = kpool[block_tables].reshape(B, Hkv, S, dh)
+    V = vpool[block_tables].reshape(B, Hkv, S, dh)
+
+    s = jnp.einsum("bhcrd,bhkd->bhcrk", q.astype(jnp.float32),
+                   K.astype(jnp.float32)) / math.sqrt(dh)
+    k_pos = jnp.arange(S)
+    q_pos = starts[:, None] + jnp.arange(C)[None, :]       # (B, C)
+    ok = (k_pos[None, None, :] <= q_pos[:, :, None]) \
+        & (k_pos[None, None, :] < lengths[:, None, None])  # (B, C, S)
+    s = jnp.where(ok[:, None, :, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bhcrk,bhkd->bhcrd", w, V.astype(jnp.float32))
+    return out.astype(q.dtype)

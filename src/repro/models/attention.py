@@ -174,6 +174,48 @@ def gqa_decode_paged(cfg, p, x, kpool, vpool, idx, block_tables, lengths,
     return logical(out, "batch", "seq", "embed"), kpool, vpool
 
 
+def gqa_prefill_paged(cfg, p, x, kpool, vpool, idx, block_tables, lengths,
+                      starts, write_slots, write_offs, positions
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill one prompt CHUNK against the device-resident paged pool —
+    the prefill symmetric of ``gqa_decode_paged``.
+
+    The chunk's K/V is scattered straight into this layer's pool slice
+    (B*C*Hkv*dh elements — no dense max_seq cache is ever materialized),
+    then the chunked-prefill Pallas kernel attends causally against the
+    pool through the block tables: each chunk token sees the request's
+    stored prefix plus the in-chunk tokens at or before its own position.
+    Padded rows carry lengths == 0 and padded tokens write to the sink
+    slot, so garbage never reaches a real page or a used output.
+
+    x:            (B, C, d) chunk hidden states
+    kpool/vpool:  (L, slots, page, dh) full stacked pools (scan carry)
+    idx:          layer index into the pool's leading axis
+    block_tables: (B, Hkv, max_pages) int32 slot ids
+    lengths:      (B,) int32 tokens stored INCLUDING this chunk's writes
+    starts:       (B,) int32 absolute position of each chunk's first token
+    write_slots:  (B, Hkv, C) int32 slot for each chunk token's page
+    write_offs:   (B, C) int32 offset of each chunk token within its page
+    positions:    (B, C) int32 absolute token positions (RoPE)
+    """
+    from repro.kernels.paged_attention import paged_prefill_attention
+    B, C, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _gqa_qkv(cfg, p, x, positions)
+    cdt = kpool.dtype                        # may be f8 (kv_cache_dtype)
+    kpool = kpool.at[idx, write_slots, write_offs[:, None, :]].set(
+        jnp.swapaxes(k, 1, 2).astype(cdt))
+    vpool = vpool.at[idx, write_slots, write_offs[:, None, :]].set(
+        jnp.swapaxes(v, 1, 2).astype(cdt))
+    # group-major head fold (H = Hkv * r), matching attention_core
+    qg = q.reshape(B, C, Hkv, H // Hkv, dh).transpose(0, 2, 1, 3, 4)
+    out = paged_prefill_attention(qg, kpool[idx].astype(q.dtype),
+                                  vpool[idx].astype(q.dtype), block_tables,
+                                  lengths, starts)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(B, C, H * dh) @ p["wo"]
+    return logical(out, "batch", "seq", "embed"), kpool, vpool
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V3)
 # ---------------------------------------------------------------------------

@@ -477,6 +477,78 @@ def paged_decode_step(cfg: ModelConfig, params: Params,
     return logits, kpool, vpool
 
 
+def supports_paged_prefill(cfg: ModelConfig) -> bool:
+    """Chunked paged prefill shares the paged-decode support envelope:
+    pure-GQA full-attention stacks with a token embedding frontend."""
+    return supports_paged_decode(cfg) and cfg.frontend not in (
+        "audio_stub", "vision_stub")
+
+
+def paged_prefill_chunk(cfg: ModelConfig, params: Params,
+                        kpool: jax.Array, vpool: jax.Array,
+                        block_tables: jax.Array, lengths: jax.Array,
+                        starts: jax.Array, write_slots: jax.Array,
+                        write_offs: jax.Array, tokens: jax.Array,
+                        last_idx: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill one (B, C) chunk of prompt tokens against the paged pools.
+
+    The prefill symmetric of ``paged_decode_step``: dense QKV/MLP run on
+    the whole chunk, each layer scatters the chunk's K/V **directly into
+    the device-resident pools** via (slot, offset) index arrays, and the
+    chunked-prefill Pallas kernel attends causally through the block
+    tables.  The dense ``(L, 1, max_seq, ...)`` intermediate cache of the
+    ``prefill`` + ``store_prompt_request`` path never exists; per-request
+    prompts are decomposed into chunks by the engine so several requests'
+    chunks batch into one jitted call, shapes pow2-bucketed in (B, C,
+    max_pages) to bound compiles by ``prefill_bucket_count()``.
+
+    tokens:     (B, C) int32 chunk tokens (0-padded rows/tails)
+    starts:     (B,) absolute position of tokens[:, 0] (prefix length)
+    lengths:    (B,) tokens stored after this chunk's writes (0 pads rows)
+    last_idx:   (B,) in-chunk index of each row's last valid token; the
+                returned logits are for that token (only meaningful for
+                rows whose chunk completes the prompt)
+    other operands documented in ``attn.gqa_prefill_paged``.
+    Returns (last-token logits (B, vocab), kpool, vpool).
+    """
+    assert supports_paged_prefill(cfg), \
+        "config not supported by paged prefill"
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = logical(x, "batch", "seq", "embed")
+    C = tokens.shape[1]
+    positions = starts[:, None] + jnp.arange(C)[None, :]
+    layer0 = 0
+    for gi, (kind, n, _win) in enumerate(layer_groups(cfg)):
+
+        def body(carry, layer_in, _kind=kind):
+            xx, kp, vp = carry
+            p_l, idx = layer_in
+            xn = rmsnorm(xx, p_l["attn_norm"], cfg.norm_eps)
+            a_out, kp, vp = attn.gqa_prefill_paged(
+                cfg, p_l["attn"], xn, kp, vp, idx, block_tables, lengths,
+                starts, write_slots, write_offs, positions)
+            xx = xx + a_out
+            if "mlp" in p_l:
+                xn = rmsnorm(xx, p_l["mlp_norm"], cfg.norm_eps)
+                if _kind.endswith("moe"):
+                    m_out, _ = mlp_mod.moe_apply(cfg, p_l["mlp"], xn)
+                else:
+                    m_out = mlp_mod.mlp_apply(cfg, p_l["mlp"], xn)
+                xx = xx + m_out
+            return (xx, kp, vp), None
+
+        (x, kpool, vpool), _ = jax.lax.scan(
+            body, (x, kpool, vpool),
+            (params["groups"][gi], layer0 + jnp.arange(n)))
+        layer0 += n
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.take_along_axis(h, last_idx[:, None, None], axis=1)
+    logits = (last[:, 0] @ _lm_head(cfg, params)).astype(jnp.float32)
+    logits = logical(logits, "batch", "vocab")
+    return logits, kpool, vpool
+
+
 def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
                 tokens: jax.Array) -> Tuple[jax.Array, Cache]:
     """One decode step for all sequences.  tokens: (B, 1) int32.

@@ -35,8 +35,30 @@ Paged decode fast path (``EngineConfig.decode_mode == "paged"``, default):
     it — kept as the token-exactness oracle, for MLA/ssm configs, and for
     the before/after record in ``benchmarks/engine_decode_bench.py``.
 
+Chunked prefill fast path (``EngineConfig.prefill_mode == "paged"``,
+default):
+
+  * Prompts are decomposed into fixed-size chunks; each ``step()`` runs ONE
+    chunk per prefilling request, with several requests' chunks batched
+    into a single jitted ``transformer.paged_prefill_chunk`` call whose
+    K/V is scattered **directly into the device-resident pools** via
+    (slot, offset) index arrays — the dense ``(L, 1, max_seq, ...)``
+    intermediate cache and the ``store_prompt_request`` round-trip of the
+    serial path never happen.  Chunks interleave with decode steps, so a
+    long prompt no longer stalls the running decode batch (Sarathi-style
+    piggybacking).
+  * Chunk shapes are pow2-bucketed in (batch, chunk length, table pages);
+    compile count is bounded by ``prefill_bucket_count()``.  Padded rows
+    carry length 0 and padded tokens write to the sink slot.
+  * The serial dense path (``prefill_mode == "dense"``) runs ``prefill`` +
+    ``store_prompt_request`` per request — kept as the token-exactness
+    oracle and for MLA/ssm configs.
+
 Per-step host<->device byte counts for both paths accumulate in
-``metrics["h2d_bytes"] / metrics["d2h_bytes"]``.
+``metrics["h2d_bytes"] / metrics["d2h_bytes"]``; prefill-side traffic
+(tokens + tables upload) is additionally broken out in
+``metrics["prefill_h2d_bytes"]``, and TTFT p50/p95 over finished prefills
+in ``metrics["ttft_p50"] / metrics["ttft_p95"]``.
 
 Token-exactness is tested against a plain dense decode (tests/test_engine,
 tests/test_engine_paged — the latter interleaves migration/preemption).
@@ -76,6 +98,16 @@ def _bucket(n: int, lo: int = 1) -> int:
     return b
 
 
+def _pow2s(n: int) -> List[int]:
+    """All bucket values up to _bucket(n): [1, 2, 4, ..., _bucket(n)]."""
+    out, b = [], 1
+    while b < n:
+        out.append(b)
+        b *= 2
+    out.append(b)
+    return out
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 32
@@ -86,6 +118,12 @@ class EngineConfig:
     # "paged": device-resident pools + Pallas kernel + bucketed jit;
     # "dense": gather_dense reference path (token-exactness oracle).
     decode_mode: str = "paged"
+    # "paged": prompts decomposed into chunks written straight into the
+    # pools, chunks of several requests batched per step and interleaved
+    # with decode (Sarathi-style piggybacking); "dense": serial full-prompt
+    # prefill + store_prompt_request (token-exactness oracle).
+    prefill_mode: str = "paged"
+    prefill_chunk: int = 32         # max prompt tokens per chunk (pow2)
 
 
 class InferenceEngine:
@@ -134,15 +172,22 @@ class InferenceEngine:
 
         self.queue: Deque[Request] = collections.deque()
         self.running: List[Request] = []
+        # admitted but not fully written to the pool (chunked prefill)
+        self.prefilling: List[Request] = []
         self.attn_reqs: Dict[int, AttnRequest] = {}
         self.finished: List[Request] = []
         self.clock = 0.0
         self.metrics = {"migrated_bytes": 0.0, "evictions": 0,
                         "redispatches": 0, "steps": 0,
-                        "h2d_bytes": 0.0, "d2h_bytes": 0.0}
+                        "h2d_bytes": 0.0, "d2h_bytes": 0.0,
+                        "prefill_h2d_bytes": 0.0, "prefill_chunks": 0,
+                        "ttft_p50": 0.0, "ttft_p95": 0.0}
+        self._ttfts: List[float] = []
 
         self.use_paged = (engine_cfg.decode_mode == "paged"
                           and T.supports_paged_decode(cfg))
+        self.use_paged_prefill = (engine_cfg.prefill_mode == "paged"
+                                  and T.supports_paged_prefill(cfg))
         self._decode_fn = jax.jit(
             lambda p, c, t: T.decode_step(cfg, p, c, t))
         self._prefill_fn = jax.jit(
@@ -154,16 +199,40 @@ class InferenceEngine:
             lambda p, kp, vp, bt, ln, ws, wo, t, pos: T.paged_decode_step(
                 cfg, p, kp, vp, bt, ln, ws, wo, t, pos),
             donate_argnums=donate)
+        self._chunk_fn = jax.jit(
+            lambda p, kp, vp, bt, ln, st, ws, wo, t, li:
+            T.paged_prefill_chunk(cfg, p, kp, vp, bt, ln, st, ws, wo, t,
+                                  li),
+            donate_argnums=donate)
         self._decode_shapes: Set[Tuple[int, int]] = set()
+        self._prefill_shapes: Set[Tuple[int, int, int]] = set()
 
     # -------------------------------------------------------- compile bounds
+    def _max_pages(self) -> int:
+        return -(-self.ecfg.max_seq // self.ecfg.page_size)
+
+    def decode_bucket_shapes(self) -> List[Tuple[int, int]]:
+        """Every (batch-bucket, pages-bucket) shape the paged decode step
+        can be jitted at — the full compile universe."""
+        return [(b, p) for b in _pow2s(self.ecfg.max_batch)
+                for p in _pow2s(self._max_pages())]
+
+    def prefill_bucket_shapes(self) -> List[Tuple[int, int, int]]:
+        """Every (batch-bucket, chunk-bucket, pages-bucket) shape the
+        chunked prefill step can be jitted at."""
+        return [(b, c, p) for b in _pow2s(self.ecfg.max_batch)
+                for c in _pow2s(self.ecfg.prefill_chunk)
+                for p in _pow2s(self._max_pages())]
+
     def bucket_count(self) -> int:
         """Upper bound on paged-decode jit compilations: one per
         (batch-bucket, pages-bucket) pair."""
-        b_buckets = _bucket(self.ecfg.max_batch).bit_length()
-        pages = -(-self.ecfg.max_seq // self.ecfg.page_size)
-        p_buckets = _bucket(pages).bit_length()
-        return b_buckets * p_buckets
+        return len(self.decode_bucket_shapes())
+
+    def prefill_bucket_count(self) -> int:
+        """Upper bound on chunked-prefill jit compilations: one per
+        (batch-bucket, chunk-bucket, pages-bucket) triple."""
+        return len(self.prefill_bucket_shapes())
 
     def decode_compile_count(self) -> int:
         """Actual number of paged-decode compilations so far."""
@@ -172,6 +241,13 @@ class InferenceEngine:
         except Exception:               # jax without _cache_size
             return len(self._decode_shapes)
 
+    def prefill_compile_count(self) -> int:
+        """Actual number of chunked-prefill compilations so far."""
+        try:
+            return int(self._chunk_fn._cache_size())
+        except Exception:               # jax without _cache_size
+            return len(self._prefill_shapes)
+
     # ------------------------------------------------------------------ admit
     def submit(self, req: Request) -> None:
         req.arrival = req.arrival or self.clock
@@ -179,10 +255,11 @@ class InferenceEngine:
 
     def _try_admit(self) -> List[Request]:
         admitted = []
-        while self.queue and len(self.running) < self.ecfg.max_batch:
+        while self.queue and (len(self.running) + len(self.prefilling)
+                              < self.ecfg.max_batch):
             req = self.queue[0]
             if req.arrival > self.clock:
-                if not self.running and not admitted:
+                if not self.running and not self.prefilling and not admitted:
                     # idle: jump to the next arrival
                     self.clock = req.arrival
                 else:
@@ -226,6 +303,11 @@ class InferenceEngine:
         return g == self.cfg.n_kv_heads
 
     # ---------------------------------------------------------------- prefill
+    def _record_ttft(self, ttft: float) -> None:
+        self._ttfts.append(ttft)
+        self.metrics["ttft_p50"] = float(np.percentile(self._ttfts, 50))
+        self.metrics["ttft_p95"] = float(np.percentile(self._ttfts, 95))
+
     def _prefill(self, req: Request) -> None:
         # a PREEMPTED request resumes with prompt + generated tokens as the
         # prefill input (teacher-forcing: identical K/V and next-token
@@ -233,20 +315,99 @@ class InferenceEngine:
         tokens = jnp.asarray(req.prompt + req.output, jnp.int32)[None]
         ctx = int(tokens.shape[1])
         logits, cache = self._prefill_fn(self.params, {"tokens": tokens})
+        self.metrics["h2d_bytes"] += ctx * 4
+        self.metrics["prefill_h2d_bytes"] += ctx * 4
         # bulk-store prompt K/V for all head groups: one device scatter,
         # no host round-trip of the cache contents
         kv = cache["groups"][0]
         self.kv.store_prompt_request(req.rid, kv["k"][:, 0, :ctx],
                                      kv["v"][:, 0, :ctx])
+        req.prefill_pos = ctx
         first = int(np.argmax(np.asarray(logits[0])))
+        self.metrics["d2h_bytes"] += np.asarray(logits).nbytes
         req.output.append(first)
         # one token appended to every group's cache next decode step
         req.state = RequestState.RUNNING
         if req.ttft is None:
             req.ttft = self.clock - req.arrival
+            self._record_ttft(req.ttft)
         self.running.append(req)
         if req.done:        # max_new_tokens == 1, or resume filled the last
             self._finish(req)
+
+    def _prefill_chunk_step(self) -> None:
+        """Run ONE prompt chunk for every prefilling request, batched into
+        a single jitted ``paged_prefill_chunk`` call.  K/V lands directly
+        in the device pools; a request whose chunk completes its prompt
+        (incl. preemption-replay tokens) samples its first token and joins
+        the decode batch.  Long prompts spread over several steps, so the
+        running decode batch keeps producing tokens in between (Sarathi-
+        style piggybacking)."""
+        rows = [(r, r.prompt + r.output) for r in self.prefilling]
+        if not rows:
+            return
+        cfg = self.cfg
+        Hkv, page = cfg.n_kv_heads, self.kv.page
+        chunk = self.ecfg.prefill_chunk
+        spans = [(r, full, min(chunk, len(full) - r.prefill_pos))
+                 for r, full in rows]
+        Bp = _bucket(len(spans))
+        Cp = _bucket(max(n for _, _, n in spans))
+        maxp = max(-(-(r.prefill_pos + n) // page) for r, _, n in spans)
+        Pp = _bucket(maxp)
+        sink = self.kv.sink
+        toks = np.zeros((Bp, Cp), np.int32)
+        starts = np.zeros((Bp,), np.int32)
+        lengths = np.zeros((Bp,), np.int32)
+        last_idx = np.zeros((Bp,), np.int32)
+        tables = np.full((Bp, Hkv, Pp), sink, np.int32)
+        wslots = np.full((Bp, Hkv, Cp), sink, np.int32)
+        woffs = np.zeros((Bp, Cp), np.int32)
+        for i, (r, full, n) in enumerate(spans):
+            s0 = r.prefill_pos
+            toks[i, :n] = full[s0:s0 + n]
+            starts[i] = s0
+            lengths[i] = s0 + n
+            last_idx[i] = n - 1
+            slots, offs = self.kv.request_scatter_indices(r.rid, s0, n)
+            wslots[i, :, :n] = slots
+            woffs[i, :n] = offs
+            for g in range(Hkv):
+                # the chain covers the FULL prompt; the kernel only reads
+                # pages with base < lengths[i], all within the first Pp
+                chain = self.kv.block_table(r.rid, g)[:Pp]
+                tables[i, g, :len(chain)] = chain
+        self._prefill_shapes.add((Bp, Cp, Pp))
+        logits, self.kv.kpool, self.kv.vpool = self._chunk_fn(
+            self.params, self.kv.kpool, self.kv.vpool,
+            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(starts),
+            jnp.asarray(wslots), jnp.asarray(woffs), jnp.asarray(toks),
+            jnp.asarray(last_idx))
+        h2d = (tables.nbytes + lengths.nbytes + starts.nbytes
+               + wslots.nbytes + woffs.nbytes + toks.nbytes
+               + last_idx.nbytes)
+        self.metrics["h2d_bytes"] += h2d
+        self.metrics["prefill_h2d_bytes"] += h2d
+        self.metrics["prefill_chunks"] += 1
+        self.clock += self._model_prefill_time(
+            sum(n for _, _, n in spans))
+        nxt = None
+        for i, (r, full, n) in enumerate(spans):
+            r.prefill_pos += n
+            if r.prefill_pos < len(full):
+                continue
+            if nxt is None:             # logits pulled once, on demand
+                nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+                self.metrics["d2h_bytes"] += logits.nbytes
+            r.output.append(int(nxt[i]))
+            r.state = RequestState.RUNNING
+            self.prefilling.remove(r)
+            self.running.append(r)
+            if r.ttft is None:
+                r.ttft = self.clock - r.arrival
+                self._record_ttft(r.ttft)
+            if r.done:      # max_new_tokens == 1, or resume filled the last
+                self._finish(r)
 
     # ----------------------------------------------------------------- decode
     def _decode_batch(self) -> None:
@@ -398,23 +559,30 @@ class InferenceEngine:
             self._apply_migration(d.request.rid, d.new_placement)
             self.metrics["redispatches"] += 1
         for ar in evicted:
-            req = next(r for r in self.running if r.rid == ar.rid)
+            req = next(r for r in self.running + self.prefilling
+                       if r.rid == ar.rid)
             self._preempt(req)
 
     def _preempt(self, req: Request) -> None:
         """Device-local LIFO eviction (§5.3): release the request's pages
-        and requeue it at the front; it resumes via replay prefill."""
+        and requeue it at the front; it resumes via replay prefill (the
+        chunked path replays prompt + generated tokens chunk by chunk)."""
         self.kv.release(req.rid)
         req.state = RequestState.PREEMPTED
         req.placement = {}
-        self.running.remove(req)
+        req.prefill_pos = 0
+        if req in self.running:
+            self.running.remove(req)
+        if req in self.prefilling:
+            self.prefilling.remove(req)
         self.attn_reqs.pop(req.rid, None)
         self.queue.appendleft(req)
         self.metrics["evictions"] += 1
 
     def _apply_migration(self, rid: int, new_placement: Dict[int, int]
                          ) -> None:
-        req = next((r for r in self.running if r.rid == rid), None)
+        req = next((r for r in self.running + self.prefilling
+                    if r.rid == rid), None)
         if req is None:
             return
         old = req.placement
@@ -431,8 +599,15 @@ class InferenceEngine:
         admitted = self._try_admit()
         for req in admitted:
             req.prefill_start = self.clock
-            self.clock += self._model_prefill_time(len(req.prompt))
-            self._prefill(req)
+            if self.use_paged_prefill:
+                # chunked: prompt writes spread over the next steps,
+                # interleaved with decode — no head-of-line blocking
+                self.prefilling.append(req)
+            else:
+                self.clock += self._model_prefill_time(len(req.prompt))
+                self._prefill(req)
+        if self.use_paged_prefill:
+            self._prefill_chunk_step()
         self._decode_batch()
         # Θ-triggered rebalance (at most one request per step, as in §5.3)
         d = maybe_rebalance(self.workers, list(self.attn_reqs.values()),
@@ -446,6 +621,7 @@ class InferenceEngine:
         self.clock += step_time
         self.metrics["steps"] += 1
         return {"clock": self.clock, "running": len(self.running),
+                "prefilling": len(self.prefilling),
                 "queued": len(self.queue)}
 
     # ------------------------------------------------------ simulated timing
@@ -478,6 +654,6 @@ class InferenceEngine:
     # ------------------------------------------------------------------- run
     def run_until_drained(self, max_steps: int = 10000) -> None:
         for _ in range(max_steps):
-            if not self.queue and not self.running:
+            if not self.queue and not self.running and not self.prefilling:
                 break
             self.step()

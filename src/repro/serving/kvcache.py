@@ -142,17 +142,29 @@ class PagedHeadCache:
         """Bulk store a whole request's prompt K/V for ALL head groups with
         one scatter per pool.  k, v: (L, ctx, Hkv, dh) — the layout emitted
         by ``transformer.prefill`` (device array; no host round-trip)."""
-        ctx, Hkv = k.shape[1], k.shape[2]
-        slots = np.empty((Hkv, ctx), np.int32)
-        offs = np.empty((Hkv, ctx), np.int32)
-        for g in range(Hkv):
-            s, o = self._scatter_indices(rid, g, ctx)
-            slots[g], offs[g] = s, o
+        ctx = k.shape[1]
+        slots, offs = self.request_scatter_indices(rid, 0, ctx)
         cdt = self.kpool.dtype
         kj = jnp.transpose(jnp.asarray(k, cdt), (0, 2, 1, 3))  # (L,Hkv,ctx,dh)
         vj = jnp.transpose(jnp.asarray(v, cdt), (0, 2, 1, 3))
-        self.kpool = self.kpool.at[:, slots, offs].set(kj)
-        self.vpool = self.vpool.at[:, slots, offs].set(vj)
+        self.kpool = self.kpool.at[:, slots, offs[None, :]].set(kj)
+        self.vpool = self.vpool.at[:, slots, offs[None, :]].set(vj)
+
+    def request_scatter_indices(self, rid: int, start: int, n: int
+                                ) -> Tuple[np.ndarray, np.ndarray]:
+        """(Hkv, n) slot ids + (n,) page offsets covering token positions
+        [start, start + n) of EVERY head group, in one vectorized NumPy
+        pass over the group chains (no per-group index loop) — feeds both
+        the bulk prompt store and the chunked-prefill write indices."""
+        Hkv = self.cfg.n_kv_heads
+        t = np.arange(start, start + n)
+        page_idx = t // self.page
+        # all groups of one request hold the same token count, so the
+        # chain matrix is rectangular over the pages this range touches
+        chains = np.asarray(
+            [[s for _, s in self.tables[(rid, g)]] for g in range(Hkv)],
+            np.int32)
+        return chains[:, page_idx], (t % self.page).astype(np.int32)
 
     def _scatter_indices(self, rid: int, group: int, ctx: int
                          ) -> Tuple[np.ndarray, np.ndarray]:

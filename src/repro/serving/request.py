@@ -26,6 +26,9 @@ class Request:
     placement: Dict[int, int] = dataclasses.field(default_factory=dict)
     # engine bookkeeping
     slot: int = -1                  # batch slot in the dense compute view
+    # tokens of prompt+output already written to the paged pool by the
+    # chunked prefill scheduler (reset to 0 on preemption — replay)
+    prefill_pos: int = 0
     ttft: Optional[float] = None
     finish_time: Optional[float] = None
     prefill_start: Optional[float] = None

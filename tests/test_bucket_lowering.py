@@ -1,0 +1,58 @@
+"""Per-bucket lowering checks: every shape the pow2 bucketing can ever
+present to the jitted paged decode / chunked prefill functions must lower
+cleanly.  ``jax.jit(...).lower`` traces the full function (scan over
+layers, scatter writes, the Pallas grid/block specs) without executing, so
+a shape bug in ANY bucket — not just the ones a workload happens to hit —
+fails here, on CPU, without a TPU in the loop."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cluster import ClusterSpec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import EngineConfig, InferenceEngine
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                  head_dim=16, dtype="float32", remat=False,
+                  scan_q_chunk=64, loss_chunk=64)
+PARAMS = T.init_params(CFG, jax.random.PRNGKey(0))
+
+S32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def make_engine():
+    cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
+    # small bounds keep the bucket universe enumerable: B in {1,2},
+    # pages in {1,2}, chunk in {1,2,4,8}
+    return InferenceEngine(CFG, PARAMS, cl, primary_ids=[0],
+                           pool_ids=[1, 2],
+                           engine_cfg=EngineConfig(max_batch=2, max_seq=32,
+                                                   page_size=16,
+                                                   prefill_chunk=8))
+
+
+ENG = make_engine()
+POOL = jax.ShapeDtypeStruct(ENG.kv.kpool.shape, ENG.kv.kpool.dtype)
+HKV = CFG.n_kv_heads
+
+
+def test_bucket_universe_matches_counts():
+    assert len(ENG.decode_bucket_shapes()) == ENG.bucket_count() == 4
+    assert len(ENG.prefill_bucket_shapes()) == ENG.prefill_bucket_count() \
+        == 16
+
+
+@pytest.mark.parametrize("B,P", ENG.decode_bucket_shapes())
+def test_decode_bucket_lowers(B, P):
+    ENG._paged_fn.lower(PARAMS, POOL, POOL, S32(B, HKV, P), S32(B),
+                        S32(B, HKV), S32(B), S32(B, 1), S32(B))
+
+
+@pytest.mark.parametrize("B,C,P", ENG.prefill_bucket_shapes())
+def test_prefill_bucket_lowers(B, C, P):
+    ENG._chunk_fn.lower(PARAMS, POOL, POOL, S32(B, HKV, P), S32(B),
+                        S32(B), S32(B, HKV, C), S32(B, C), S32(B, C),
+                        S32(B))

@@ -8,7 +8,10 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
-from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_ref,
+                                           paged_prefill_attention,
+                                           paged_prefill_attention_ref)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -146,3 +149,70 @@ def test_paged_matches_dense_attention():
     np.testing.assert_allclose(
         np.asarray(paged).reshape(B, Hkv * r, dh),
         np.asarray(dense)[:, 0], rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hkv,C,r,dh,page,maxp", [
+    (2, 2, 8, 2, 32, 8, 4),
+    (3, 1, 4, 4, 64, 16, 2),
+    (1, 4, 16, 1, 32, 8, 8),   # chunk spanning several pages
+])
+def test_paged_prefill_vs_ref(dtype, B, Hkv, C, r, dh, page, maxp):
+    slots = B * Hkv * maxp + 4
+    rng = np.random.default_rng(1)
+    bt = jnp.asarray(rng.permutation(slots)[:B * Hkv * maxp]
+                     .reshape(B, Hkv, maxp), jnp.int32)
+    # each row: a stored prefix of `start` tokens plus an n<=C token chunk
+    starts = jnp.asarray(rng.integers(0, page * maxp - C, B), jnp.int32)
+    nvalid = rng.integers(1, C + 1, B)
+    lengths = jnp.asarray(np.asarray(starts) + nvalid, jnp.int32)
+    kpool = jax.random.normal(KEY, (slots, page, dh), dtype)
+    vpool = jax.random.normal(jax.random.fold_in(KEY, 1),
+                              (slots, page, dh), dtype)
+    q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hkv, C, r, dh),
+                          dtype)
+    out = paged_prefill_attention(q, kpool, vpool, bt, lengths, starts)
+    ref = paged_prefill_attention_ref(q, kpool, vpool, bt, lengths, starts)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_paged_prefill_matches_chunked_attention():
+    """Prefill kernel over scattered pages == dense causal chunk attention
+    against the same prefix (the chunked_attention path dense prefill
+    uses), for a chunk appended after a stored prefix."""
+    from repro.models.common import chunked_attention
+    B, Hkv, C, r, dh, page, maxp = 2, 2, 8, 2, 32, 8, 4
+    S = page * maxp
+    slots = B * Hkv * maxp
+    rng = np.random.default_rng(5)
+    bt_np = rng.permutation(slots).reshape(B, Hkv, maxp)
+    starts = np.asarray([0, 13])          # row 0: no prefix; row 1: mid-page
+    lengths = jnp.asarray(starts + C, jnp.int32)
+    key = jax.random.PRNGKey(5)
+    K = jax.random.normal(key, (B, S, Hkv, dh))
+    V = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, dh))
+    kpool = np.zeros((slots, page, dh), np.float32)
+    vpool = np.zeros((slots, page, dh), np.float32)
+    for b in range(B):
+        for h in range(Hkv):
+            for p in range(maxp):
+                kpool[bt_np[b, h, p]] = np.asarray(
+                    K[b, p * page:(p + 1) * page, h])
+                vpool[bt_np[b, h, p]] = np.asarray(
+                    V[b, p * page:(p + 1) * page, h])
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, C, Hkv * r, dh))
+    qg = q.reshape(B, C, Hkv, r, dh).transpose(0, 2, 1, 3, 4)
+    paged = paged_prefill_attention(
+        qg, jnp.asarray(kpool), jnp.asarray(vpool),
+        jnp.asarray(bt_np, jnp.int32), lengths,
+        jnp.asarray(starts, jnp.int32))
+    for b in range(B):
+        n = int(starts[b]) + C
+        dense = chunked_attention(q[b:b + 1], K[b:b + 1, :n],
+                                  V[b:b + 1, :n], causal=True,
+                                  q_offset=int(starts[b]))
+        got = np.asarray(paged[b].transpose(1, 0, 2, 3)).reshape(
+            C, Hkv * r, dh)
+        np.testing.assert_allclose(got, np.asarray(dense)[0],
+                                   rtol=3e-5, atol=3e-5)

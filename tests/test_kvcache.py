@@ -66,6 +66,43 @@ def test_append_token_and_migrate():
     np.testing.assert_array_equal(K[:, :, 0], K2[:, :, 0])  # data survives
 
 
+def test_request_scatter_indices_vectorized_matches_per_group():
+    """The one-pass (Hkv, n) index builder must agree with the per-group
+    _scatter_indices path, for full prompts and chunk sub-ranges."""
+    kv = make_cache()
+    ctx = 11
+    for g in range(CFG.n_kv_heads):
+        kv.ensure_capacity(0, g, g % 2, ctx)
+    slots, offs = kv.request_scatter_indices(0, 0, ctx)
+    assert slots.shape == (CFG.n_kv_heads, ctx) and offs.shape == (ctx,)
+    for g in range(CFG.n_kv_heads):
+        s, o = kv._scatter_indices(0, g, ctx)
+        np.testing.assert_array_equal(slots[g], s)
+        np.testing.assert_array_equal(offs, o)
+    # chunk sub-ranges tile the full range (page-straddling chunks incl.)
+    for start, n in [(0, 3), (3, 5), (8, 3)]:
+        cs, co = kv.request_scatter_indices(0, start, n)
+        np.testing.assert_array_equal(cs, slots[:, start:start + n])
+        np.testing.assert_array_equal(co, offs[start:start + n])
+
+
+def test_store_prompt_request_roundtrip():
+    """Bulk all-group store (vectorized indices) survives gather_dense."""
+    kv = make_cache()
+    L, Hkv, dh = CFG.n_layers, CFG.n_kv_heads, CFG.head_dim
+    ctx = 10
+    rng = np.random.default_rng(2)
+    k = rng.random((L, ctx, Hkv, dh)).astype(np.float32)
+    v = rng.random((L, ctx, Hkv, dh)).astype(np.float32)
+    for g in range(Hkv):
+        kv.ensure_capacity(0, g, g % 2, ctx)
+        kv.lengths[(0, g)] = ctx
+    kv.store_prompt_request(0, k, v)
+    K, V = kv.gather_dense(0, ctx)
+    np.testing.assert_array_equal(K, k)
+    np.testing.assert_array_equal(V, v)
+
+
 def test_exhaustion_returns_false():
     kv = make_cache(slots=(2, 0))
     assert kv.ensure_capacity(0, 0, 0, 8)       # 2 pages
