@@ -6,11 +6,15 @@ For each mode the same workload runs through the engine; we report
   engine/h2d_per_step_<mode>    host->device bytes moved per decode step
   engine/d2h_per_step_<mode>    device->host bytes moved per decode step
   engine/compiles_<mode>        jit compilations of the decode function
+  engine/telemetry_overhead_pct paged-step median with the tracer enabled
+                                vs disabled (disabled tracing must stay
+                                near zero cost)
 
-The dense path re-gathers every request's pages into a host tensor each
-step and re-uploads it (and downloads the whole written cache back); the
-paged path ships tokens + block tables only, with compile count bounded by
-the shape buckets.  ``--smoke`` shrinks the workload for CI.
+``--trace-out PATH`` writes the telemetry run's Chrome trace.  The dense
+path re-gathers every request's pages into a host tensor each step and
+re-uploads it (and downloads the whole written cache back); the paged path
+ships tokens + block tables only, with compile count bounded by the shape
+buckets.  ``--smoke`` shrinks the workload for CI.
 """
 
 from __future__ import annotations
@@ -42,16 +46,20 @@ def build_model(smoke: bool):
     return cfg, params
 
 
-def run_mode(mode: str, cfg, params, prompts, new_tokens: int):
+def run_mode(mode: str, cfg, params, prompts, new_tokens: int,
+             telemetry: bool = False, trace_out=None, quiet: bool = False):
     cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
     eng = InferenceEngine(cfg, params, cl, primary_ids=[0], pool_ids=[1, 2],
                           engine_cfg=EngineConfig(
-                              max_batch=8, max_seq=128, decode_mode=mode))
+                              max_batch=8, max_seq=128, decode_mode=mode,
+                              telemetry=telemetry))
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
     step_times = []
-    h2d0 = d2h0 = 0.0
+    warm_times = []
+    h2d0 = rec0 = 0.0
     decode_steps = 0
+    recompiles = eng.registry.counter("jit/recompiles")
     while eng.queue or eng.running:
         t0 = time.perf_counter()
         eng.step()
@@ -59,17 +67,24 @@ def run_mode(mode: str, cfg, params, prompts, new_tokens: int):
         if eng.metrics["h2d_bytes"] > h2d0:      # a decode batch ran
             step_times.append(dt)
             decode_steps += 1
-        h2d0, d2h0 = eng.metrics["h2d_bytes"], eng.metrics["d2h_bytes"]
+            if recompiles.value == rec0:         # no jit compile this step
+                warm_times.append(dt)
+        h2d0, rec0 = eng.metrics["h2d_bytes"], recompiles.value
         if eng.metrics["steps"] > 2000:
             break
-    # drop the first (compile-laden) step; median of the rest
-    warm = sorted(step_times[1:]) or step_times
+    # median over compile-free steps (fallback: drop the first step)
+    warm = sorted(warm_times) or sorted(step_times[1:]) or step_times
     med = warm[len(warm) // 2]
     try:
         compiles = int(eng._paged_fn._cache_size()) if mode == "paged" \
             else int(eng._decode_fn._cache_size())
     except Exception:
         compiles = -1
+    if trace_out:
+        n_ev = eng.tracer.write_chrome(trace_out)
+        emit("engine/trace_events", n_ev, trace_out)
+    if quiet:
+        return med
     n = max(1, decode_steps)
     emit(f"engine/decode_step_{mode}", med,
          f"decode_steps={decode_steps} finished={len(eng.finished)}")
@@ -86,6 +101,8 @@ def main(argv=()) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes / few tokens for CI")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the telemetry run's Chrome trace here")
     args = ap.parse_args(list(argv))
     cfg, params = build_model(args.smoke)
     rng = np.random.default_rng(0)
@@ -98,6 +115,15 @@ def main(argv=()) -> None:
     dense = run_mode("dense", cfg, params, prompts, new_tokens)
     emit("engine/decode_speedup_dense_over_paged", dense / max(paged, 1e-9),
          "ratio (interpret-mode CPU; architectural, not TPU-grade)")
+    # telemetry overhead: a longer decode run so warm (compile-free) steps
+    # dominate, tracer off vs on, same workload
+    ot = new_tokens * 4
+    base = run_mode("paged", cfg, params, prompts, ot, quiet=True)
+    traced = run_mode("paged", cfg, params, prompts, ot,
+                      telemetry=True, trace_out=args.trace_out, quiet=True)
+    emit("engine/telemetry_overhead_pct",
+         (traced - base) / max(base, 1e-9) * 100.0,
+         "paged median warm step, tracer on vs off")
 
 
 if __name__ == "__main__":

@@ -54,12 +54,14 @@ def build_model(smoke: bool):
 
 
 def run_mode(mode: str, cfg, params, prompts, new_tokens: int,
-             max_seq: int, chunk: int):
+             max_seq: int, chunk: int,
+             telemetry: bool = False, trace_out=None, quiet: bool = False):
     cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
     eng = InferenceEngine(cfg, params, cl, primary_ids=[0], pool_ids=[1, 2],
                           engine_cfg=EngineConfig(
                               max_batch=8, max_seq=max_seq,
-                              prefill_mode=mode, prefill_chunk=chunk))
+                              prefill_mode=mode, prefill_chunk=chunk,
+                              telemetry=telemetry))
     dense_stores = {"n": 0}
     orig_store = eng.kv.store_prompt_request
 
@@ -98,6 +100,11 @@ def run_mode(mode: str, cfg, params, prompts, new_tokens: int,
         intermediate = 0
     else:
         intermediate = dense_stores["n"] * per_req
+    if trace_out:
+        n_ev = eng.tracer.write_chrome(trace_out)
+        emit("engine/prefill_trace_events", n_ev, trace_out)
+    if quiet:
+        return med
     emit(f"engine/prefill_ttft_p50_{mode}", eng.metrics["ttft_p50"] * 1e6,
          f"modeled clock us, finished={len(eng.finished)}")
     emit(f"engine/prefill_ttft_p95_{mode}", eng.metrics["ttft_p95"] * 1e6,
@@ -121,6 +128,9 @@ def main(argv=()) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes / few tokens for CI")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="re-run the paged mode with telemetry on and "
+                         "write its Chrome trace here")
     args = ap.parse_args(list(argv))
     cfg, params = build_model(args.smoke)
     rng = np.random.default_rng(0)
@@ -139,6 +149,9 @@ def main(argv=()) -> None:
     emit("engine/prefill_speedup_dense_over_paged",
          dense / max(paged, 1e-9),
          "per-call ratio (interpret-mode CPU; architectural, not TPU-grade)")
+    if args.trace_out:
+        run_mode("paged", cfg, params, prompts, new_tokens, max_seq, chunk,
+                 telemetry=True, trace_out=args.trace_out, quiet=True)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,17 @@
 """Fig 13: P95 per-token execution latency of the Attention and MLP modules
 during decode, Llama-70B.  Paper: Hetis reduces MLP time by up to 1.29x and
 decoding Attention by up to 1.49x.
+
+Module numbers come from the simulator's telemetry spans: every decode
+iteration records one "attention" and one "mlp" span on the simulated-clock
+track tagged with the rids it covered, and ``SimResult.p95_module`` rebuilds
+per-request totals from that span record.  ``--trace-out`` dumps the Hetis
+span timeline per workload as Chrome ``trace_event`` JSON.
 """
 
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import emit
 from repro.core.cluster import ClusterSpec
@@ -15,6 +23,12 @@ RATES = {"sharegpt": 1.5, "humaneval": 6.0, "longbench": 0.8}
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the Hetis run's Chrome trace per workload "
+                         "(workload name is appended before the extension)")
+    args = ap.parse_args()
+
     cl = ClusterSpec.paper_testbed()
     for wl, rate in RATES.items():
         trace = make_trace(wl, rate, 30.0, seed=3)
@@ -22,11 +36,17 @@ def main() -> None:
         for cls in (HetisSystem, HexgenSystem, SplitwiseSystem):
             sys_ = cls(LLAMA_70B, cl)
             res = simulate(sys_, trace, wl, rate, max_sim_seconds=240.0)
-            attn = res.p95_module("attn_time")
-            mlp = res.p95_module("mlp_time")
+            attn = res.p95_module("attention")
+            mlp = res.p95_module("mlp")
             mods[sys_.name] = (attn, mlp)
             emit(f"fig13/{wl}/{sys_.name}/attention", attn * 1e6, "")
             emit(f"fig13/{wl}/{sys_.name}/mlp", mlp * 1e6, "")
+            if args.trace_out and cls is HetisSystem:
+                stem, dot, ext = args.trace_out.rpartition(".")
+                path = f"{stem}_{wl}{dot}{ext}" if dot \
+                    else f"{args.trace_out}_{wl}.json"
+                n = res.tracer.write_chrome(path)
+                emit(f"fig13/{wl}/trace_events", n, path)
         base_attn = min(mods["hexgen"][0], mods["splitwise"][0])
         base_mlp = min(mods["hexgen"][1], mods["splitwise"][1])
         if mods["hetis"][0] > 0 and mods["hetis"][1] > 0:

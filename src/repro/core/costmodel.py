@@ -221,6 +221,23 @@ def _dense_eff(cls: DeviceClass, tokens: float) -> float:
     return eff
 
 
+def calibrate_efficiency(prev_eff: float, analytic_s: float,
+                         measured_s: float, alpha: float = 0.25,
+                         lo: float = 0.02, hi: float = 1.0) -> float:
+    """EWMA-update a roofline efficiency factor from a *measured* module
+    time (telemetry span duration).
+
+    ``analytic_s`` is the time the roofline predicts at efficiency 1.0;
+    the instantaneous efficiency estimate is analytic/measured, clamped to
+    [lo, hi] and folded with weight ``alpha`` so one slow step cannot
+    swing the cost model (the same smoothing contract as the dispatcher's
+    snapshot calibration).  Returns the updated efficiency."""
+    if measured_s <= 0.0 or analytic_s <= 0.0:
+        return prev_eff
+    inst = min(max(analytic_s / measured_s, lo), hi)
+    return (1.0 - alpha) * prev_eff + alpha * inst
+
+
 def _roofline_s(cls: DeviceClass, flops: float, nbytes: float,
                 tokens: float = 0.0) -> float:
     t_comp = flops / (cls.dense_tflops * 1e12 * _dense_eff(cls, tokens))

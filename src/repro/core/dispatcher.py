@@ -50,26 +50,35 @@ class WorkerState:
     heads: float = 0.0                  # h_i(t)
     cache_bytes: float = 0.0            # g_i(t)
     alive: bool = True
+    # measured/analytic attention-time ratio from the telemetry snapshot
+    # (calibrate_from_snapshot); scales every f_i term so dispatch and
+    # re-dispatch decisions follow *measured* latency, not just the static
+    # profile.  1.0 = trust the analytic model.
+    calib: float = 1.0
 
     def eff_a(self, group_ratio: int, head_dim: int, dtype_bytes: int) -> float:
         """Per-head slope including the per-head transfer volume (Eq 4)."""
         if self.xfer is None:
-            return self.attn.a
+            return self.calib * self.attn.a
         per_head_bytes = (2.0 + 2.0 / group_ratio) * head_dim * dtype_bytes
-        return self.attn.a + per_head_bytes * self.xfer.gamma
+        return self.calib * (self.attn.a + per_head_bytes * self.xfer.gamma)
+
+    def eff_b(self) -> float:
+        """Per-cache-byte slope under the measured calibration factor."""
+        return self.calib * self.attn.b
 
     def const(self) -> float:
         c = self.attn.c
         if self.xfer is not None:
             c += self.xfer.beta
-        return c
+        return self.calib * c
 
     def f_time(self, group_ratio: int, head_dim: int, dtype_bytes: int,
                extra_heads: float = 0.0, extra_bytes: float = 0.0) -> float:
         """f_i with optional hypothetical additional load."""
         a = self.eff_a(group_ratio, head_dim, dtype_bytes)
         return (a * (self.heads + extra_heads)
-                + self.attn.b * (self.cache_bytes + extra_bytes)
+                + self.eff_b() * (self.cache_bytes + extra_bytes)
                 + self.const())
 
     def free_bytes(self) -> float:
@@ -149,7 +158,7 @@ def _solve_relaxation(ws: List[WorkerState], requests: Sequence[AttnRequest]
         row = np.zeros(nvar)
         for j, r in enumerate(requests):
             a = w.eff_a(r.group_ratio, r.head_dim, r.dtype_bytes)
-            row[i * J + j] = a + w.attn.b * r.ctx_len * r.kv_bytes_per_token_per_head()
+            row[i * J + j] = a + w.eff_b() * r.ctx_len * r.kv_bytes_per_token_per_head()
         row[-1] = -1.0
         base = w.f_time(requests[0].group_ratio, requests[0].head_dim,
                         requests[0].dtype_bytes)
@@ -337,15 +346,53 @@ def ideal_attention_time(workers: Sequence[WorkerState],
     return worst
 
 
+ATTN_SNAPSHOT_PREFIX = "attn/device/"
+
+
+def calibrate_from_snapshot(workers: Sequence[WorkerState],
+                            snapshot: Dict[str, float],
+                            group_ratio: int, head_dim: int,
+                            dtype_bytes: int,
+                            clamp: Tuple[float, float] = (0.25, 4.0)
+                            ) -> None:
+    """Fold measured per-device attention latency into the worker models.
+
+    ``snapshot`` is a :meth:`MetricsRegistry.snapshot` dict whose
+    ``attn/device/<id>`` gauges carry EWMA-smoothed *measured* attention
+    time per device (the engine attributes its device-sync'd module-span
+    durations across placed devices).  Each live worker's ``calib``
+    becomes measured/analytic, clamped so one noisy sample cannot trigger
+    a migration storm — this is what makes ``maybe_rebalance`` act on
+    measured load rather than the static profile."""
+    for w in _live(workers):
+        meas = snapshot.get(f"{ATTN_SNAPSHOT_PREFIX}{w.device_id}")
+        if meas is None or meas <= 0.0:
+            continue
+        w.calib = 1.0                        # analytic baseline for ratio
+        analytic = w.f_time(group_ratio, head_dim, dtype_bytes)
+        if analytic <= 0.0:
+            continue
+        w.calib = min(max(meas / analytic, clamp[0]), clamp[1])
+
+
 def maybe_rebalance(workers: Sequence[WorkerState],
                     requests: Sequence[AttnRequest],
-                    theta: float = 0.5) -> Optional[RedispatchDecision]:
+                    theta: float = 0.5,
+                    snapshot: Optional[Dict[str, float]] = None
+                    ) -> Optional[RedispatchDecision]:
     """§5.3.1: if current max time deviates from ideal by more than theta,
-    re-dispatch the single request contributing most to the bottleneck."""
+    re-dispatch the single request contributing most to the bottleneck.
+
+    When a telemetry ``snapshot`` is given, measured per-device attention
+    latency recalibrates every worker first, so both the trigger and the
+    victim's new placement follow measured signals."""
     reqs = [r for r in requests if r.placement]
     if not reqs:
         return None
     r0 = reqs[0]
+    if snapshot:
+        calibrate_from_snapshot(workers, snapshot, r0.group_ratio,
+                                r0.head_dim, r0.dtype_bytes)
     cur = current_attention_time(workers, r0.group_ratio, r0.head_dim,
                                  r0.dtype_bytes)
     ideal = ideal_attention_time(workers, reqs)

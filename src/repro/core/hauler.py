@@ -82,9 +82,14 @@ class MigrationScheduler:
     is the TPU-schedule analogue of the paper's low-priority streams.
     """
 
+    XFER_SNAPSHOT_KEY = "xfer/h2d_gbps"
+
     def __init__(self, links: Dict[Tuple[int, int], TransferModel]):
         self._links = links
         self._queue: List[MigrationTask] = []
+        # measured fallback link model from the telemetry snapshot; None
+        # until calibrate_from_snapshot sees a measured bandwidth gauge
+        self._measured_default: Optional[TransferModel] = None
 
     def submit(self, tasks: Sequence[MigrationTask]) -> None:
         self._queue.extend(tasks)
@@ -93,9 +98,20 @@ class MigrationScheduler:
     def pending(self) -> List[MigrationTask]:
         return list(self._queue)
 
+    def calibrate_from_snapshot(self, snapshot: Dict[str, float]) -> None:
+        """Adopt the engine's *measured* host<->device bandwidth (EWMA
+        gauge ``xfer/h2d_gbps``) as the default link model, so migration
+        window budgeting reflects the observed interconnect rather than
+        the 10 GB/s analytic default."""
+        gbps = snapshot.get(self.XFER_SNAPSHOT_KEY, 0.0)
+        if gbps and gbps > 0.0:
+            self._measured_default = TransferModel(gamma=1.0 / (gbps * 1e9),
+                                                   beta=30e-6)
+
     def link(self, src: int, dst: int) -> TransferModel:
         tm = self._links.get((src, dst)) or self._links.get((dst, src))
-        return tm or TransferModel(gamma=1.0 / 10e9, beta=30e-6)
+        return tm or self._measured_default \
+            or TransferModel(gamma=1.0 / 10e9, beta=30e-6)
 
     def advance(self, window_s: float) -> List[MigrationTask]:
         """Run migrations inside an overlap window of ``window_s`` seconds.

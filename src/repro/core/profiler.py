@@ -120,6 +120,35 @@ def fit_attention_model(samples: Sequence[Tuple[float, float, float]]
     return AttentionModel(a, b, c), r2
 
 
+def attention_samples_from_tracer(tracer, span_name: str = "attention"
+                                  ) -> List[Tuple[float, float, float]]:
+    """(heads, cache_bytes, seconds) samples from telemetry spans.
+
+    The engine's instrumented module probe attaches ``{"heads": h,
+    "cache_bytes": g}`` args to every device-sync'd attention span; those
+    spans ARE the paper's (h, g, tau) measurement grid, collected from
+    live traffic instead of an offline sweep."""
+    samples: List[Tuple[float, float, float]] = []
+    for sp in tracer.spans(span_name):
+        if not sp.args or "heads" not in sp.args:
+            continue
+        samples.append((float(sp.args["heads"]),
+                        float(sp.args.get("cache_bytes", 0.0)),
+                        float(sp.dur)))
+    return samples
+
+
+def fit_attention_model_from_tracer(tracer, span_name: str = "attention"
+                                    ) -> Optional[Tuple[AttentionModel,
+                                                        float]]:
+    """Least-squares tau(h, g) fit over live telemetry spans; None when
+    the tracer holds fewer than 3 annotated attention spans."""
+    samples = attention_samples_from_tracer(tracer, span_name)
+    if len(samples) < 3:
+        return None
+    return fit_attention_model(samples)
+
+
 def fit_transfer_model(samples: Sequence[Tuple[float, float]]
                        ) -> Tuple[TransferModel, float]:
     """Fit rho = gamma d + beta over (bytes, seconds) samples."""

@@ -29,6 +29,13 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable telemetry and write a Chrome trace_event "
+                         "JSON (chrome://tracing / ui.perfetto.dev)")
+    ap.add_argument("--trace-modules", action="store_true",
+                    help="also run the eager per-module probe (device-"
+                         "sync'd Attention/MLP spans feeding dispatcher/"
+                         "hauler/costmodel calibration)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
@@ -40,9 +47,13 @@ def main() -> None:
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
 
     cluster = ClusterSpec.build([("A100", 1), ("3090", 2), ("P100", 1)])
+    telemetry = bool(args.trace_out) or args.trace_modules
     eng = InferenceEngine(cfg, params, cluster, primary_ids=[0],
                           pool_ids=[1, 2, 3],
-                          engine_cfg=EngineConfig(max_batch=16, max_seq=128))
+                          engine_cfg=EngineConfig(
+                              max_batch=16, max_seq=128,
+                              telemetry=telemetry,
+                              trace_modules=args.trace_modules))
 
     rng = np.random.default_rng(args.seed)
     t = 0.0
@@ -58,6 +69,13 @@ def main() -> None:
     for r in eng.finished[:4]:
         print(f"  rid={r.rid} ttft={r.ttft*1e3:.2f}ms "
               f"tokens={r.output[:8]}...")
+    snap = eng.snapshot()
+    print(f"snapshot: ttft_p95={snap['ttft_s/p95']*1e3:.3f}ms "
+          f"kv_occupancy={snap['kv/occupancy']:.3f} "
+          f"recompiles={snap['jit/recompiles']:.0f}")
+    if args.trace_out:
+        n = eng.tracer.write_chrome(args.trace_out)
+        print(f"wrote {n} trace events to {args.trace_out}")
 
 
 if __name__ == "__main__":

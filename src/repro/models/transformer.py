@@ -477,6 +477,59 @@ def paged_decode_step(cfg: ModelConfig, params: Params,
     return logits, kpool, vpool
 
 
+def paged_decode_step_traced(cfg: ModelConfig, params: Params,
+                             kpool: jax.Array, vpool: jax.Array,
+                             block_tables: jax.Array, lengths: jax.Array,
+                             write_slot: jax.Array, write_off: jax.Array,
+                             tokens: jax.Array, pos: jax.Array,
+                             tracer, span_args=None
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Instrumented twin of ``paged_decode_step``: same math, but eager
+    (Python loop over layers instead of ``lax.scan``) with one tracer span
+    per Attention / MLP module, device-sync'd so durations are real module
+    latencies.  The engine runs this when module-level tracing is on; the
+    per-head attention-latency samples it produces feed the dispatcher's
+    measured snapshot (and ``profiler.fit_attention_model_from_tracer``).
+
+    ``span_args`` (e.g. ``{"heads": ..., "cache_bytes": ...}``) is attached
+    to every attention span so the profiler can fit tau(h, g) from spans.
+    """
+    assert supports_paged_decode(cfg), "config not supported by paged decode"
+    with tracer.span("embed"):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = logical(x, "batch", "seq", "embed")
+        tracer.sync(x)
+    layer0 = 0
+    for gi, (kind, n, _win) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+        for li in range(n):
+            p_l = jax.tree.map(lambda a: a[li], gp)
+            idx = layer0 + li
+            xn = rmsnorm(x, p_l["attn_norm"], cfg.norm_eps)
+            with tracer.span("attention", args=span_args):
+                a_out, kpool, vpool = attn.gqa_decode_paged(
+                    cfg, p_l["attn"], xn, kpool, vpool, idx, block_tables,
+                    lengths, write_slot, write_off, pos)
+                tracer.sync(a_out)
+            x = x + a_out
+            if "mlp" in p_l:
+                xn = rmsnorm(x, p_l["mlp_norm"], cfg.norm_eps)
+                with tracer.span("mlp"):
+                    if kind.endswith("moe"):
+                        m_out, _ = mlp_mod.moe_apply(cfg, p_l["mlp"], xn)
+                    else:
+                        m_out = mlp_mod.mlp_apply(cfg, p_l["mlp"], xn)
+                    tracer.sync(m_out)
+                x = x + m_out
+        layer0 += n
+    with tracer.span("lm_head"):
+        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = (h[:, 0] @ _lm_head(cfg, params)).astype(jnp.float32)
+        logits = logical(logits, "batch", "vocab")
+        tracer.sync(logits)
+    return logits, kpool, vpool
+
+
 def supports_paged_prefill(cfg: ModelConfig) -> bool:
     """Chunked paged prefill shares the paged-decode support envelope:
     pure-GQA full-attention stacks with a token embedding frontend."""
@@ -546,6 +599,55 @@ def paged_prefill_chunk(cfg: ModelConfig, params: Params,
     last = jnp.take_along_axis(h, last_idx[:, None, None], axis=1)
     logits = (last[:, 0] @ _lm_head(cfg, params)).astype(jnp.float32)
     logits = logical(logits, "batch", "vocab")
+    return logits, kpool, vpool
+
+
+def paged_prefill_chunk_traced(cfg: ModelConfig, params: Params,
+                               kpool: jax.Array, vpool: jax.Array,
+                               block_tables: jax.Array, lengths: jax.Array,
+                               starts: jax.Array, write_slots: jax.Array,
+                               write_offs: jax.Array, tokens: jax.Array,
+                               last_idx: jax.Array, tracer, span_args=None
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Instrumented twin of ``paged_prefill_chunk`` — eager layer loop with
+    per-module Attention / MLP spans (see ``paged_decode_step_traced``)."""
+    assert supports_paged_prefill(cfg), \
+        "config not supported by paged prefill"
+    with tracer.span("embed"):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = logical(x, "batch", "seq", "embed")
+        tracer.sync(x)
+    C = tokens.shape[1]
+    positions = starts[:, None] + jnp.arange(C)[None, :]
+    layer0 = 0
+    for gi, (kind, n, _win) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+        for li in range(n):
+            p_l = jax.tree.map(lambda a: a[li], gp)
+            idx = layer0 + li
+            xn = rmsnorm(x, p_l["attn_norm"], cfg.norm_eps)
+            with tracer.span("attention", args=span_args):
+                a_out, kpool, vpool = attn.gqa_prefill_paged(
+                    cfg, p_l["attn"], xn, kpool, vpool, idx, block_tables,
+                    lengths, starts, write_slots, write_offs, positions)
+                tracer.sync(a_out)
+            x = x + a_out
+            if "mlp" in p_l:
+                xn = rmsnorm(x, p_l["mlp_norm"], cfg.norm_eps)
+                with tracer.span("mlp"):
+                    if kind.endswith("moe"):
+                        m_out, _ = mlp_mod.moe_apply(cfg, p_l["mlp"], xn)
+                    else:
+                        m_out = mlp_mod.mlp_apply(cfg, p_l["mlp"], xn)
+                    tracer.sync(m_out)
+                x = x + m_out
+        layer0 += n
+    with tracer.span("lm_head"):
+        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        last = jnp.take_along_axis(h, last_idx[:, None, None], axis=1)
+        logits = (last[:, 0] @ _lm_head(cfg, params)).astype(jnp.float32)
+        logits = logical(logits, "batch", "vocab")
+        tracer.sync(logits)
     return logits, kpool, vpool
 
 

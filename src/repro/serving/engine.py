@@ -54,11 +54,22 @@ default):
     ``store_prompt_request`` per request — kept as the token-exactness
     oracle and for MLA/ssm configs.
 
-Per-step host<->device byte counts for both paths accumulate in
-``metrics["h2d_bytes"] / metrics["d2h_bytes"]``; prefill-side traffic
-(tokens + tables upload) is additionally broken out in
-``metrics["prefill_h2d_bytes"]``, and TTFT p50/p95 over finished prefills
-in ``metrics["ttft_p50"] / metrics["ttft_p95"]``.
+Telemetry (``repro.telemetry``): a typed :class:`MetricsRegistry` replaces
+the old flat metrics dict — byte counters are computed from the actual
+array dtypes, TTFT/TPOT/step-latency are histograms whose percentiles are
+evaluated lazily at read time, KV-pool occupancy and per-device memory are
+callable-backed gauges, and every jitted callable is wrapped with a
+jit-recompile counter.  ``engine.metrics`` stays a backward-compatible
+mapping view over the registry; ``engine.snapshot()`` is the typed API.
+With ``EngineConfig.telemetry`` on, a :class:`Tracer` records nested
+admit/prefill_chunk/paged_decode/rebalance spans (plus modeled module
+spans on a simulated-clock track), exportable as Chrome ``trace_event``
+JSON; ``trace_modules`` additionally runs the eager per-module probe
+(``transformer.paged_decode_step_traced``) whose device-sync'd
+Attention/MLP span durations feed the dispatcher's measured snapshot
+(EWMA-smoothed per-device gauges consumed by ``maybe_rebalance``), the
+hauler's measured-bandwidth link model, and the cost model's calibrated
+dense-module efficiency.
 
 Token-exactness is tested against a plain dense decode (tests/test_engine,
 tests/test_engine_paged — the latter interleaves migration/preemption).
@@ -68,6 +79,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
@@ -75,8 +87,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cluster import ClusterSpec, Device
-from repro.core.costmodel import ModelProfile, dense_flops_layer
-from repro.core.dispatcher import (AttnRequest, WorkerState, apply_placement,
+from repro.core.costmodel import (ModelProfile, calibrate_efficiency,
+                                  dense_flops_layer)
+from repro.core.dispatcher import (ATTN_SNAPSHOT_PREFIX, AttnRequest,
+                                   WorkerState, apply_placement,
                                    current_attention_time, dispatch_lp,
                                    grow_context, handle_memory_exhaustion,
                                    maybe_rebalance, release_request)
@@ -88,6 +102,8 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.kvcache import PagedHeadCache
 from repro.serving.request import Request, RequestState
+from repro.telemetry import (MetricsRegistry, MetricsView, Tracer,
+                             count_recompiles)
 
 
 def _bucket(n: int, lo: int = 1) -> int:
@@ -124,6 +140,14 @@ class EngineConfig:
     # prefill + store_prompt_request (token-exactness oracle).
     prefill_mode: str = "paged"
     prefill_chunk: int = 32         # max prompt tokens per chunk (pow2)
+    # tracing: off by default (disabled tracer is zero-cost — no per-step
+    # allocations); the MetricsRegistry is always on.
+    telemetry: bool = False
+    # run the eager per-module probe (device-sync'd Attention/MLP spans
+    # whose durations feed the dispatcher/hauler/costmodel calibration);
+    # implies telemetry.
+    trace_modules: bool = False
+    trace_capacity: int = 65536     # tracer ring-buffer size (spans)
 
 
 class InferenceEngine:
@@ -142,8 +166,11 @@ class InferenceEngine:
         # Dispatcher worker states from analytic profiler models
         devs = {d.device_id: d for d in cluster.devices}
         self.workers: List[WorkerState] = []
+        # bytes per pool slot from the pool's actual dtype (no hardcoded
+        # "* 4": bf16/fp32 configs report what the arrays really occupy)
+        pool_itemsize = PagedHeadCache.pool_dtype(cfg).itemsize
         slot_bytes = (2 * cfg.n_layers * engine_cfg.page_size * cfg.head_dim
-                      * 4)  # fp32 pool on CPU
+                      * pool_itemsize)
         # physical pool only needs to back max_batch concurrent sequences
         # at max_seq, even if every head group lands on one device —
         # capacity beyond that is dispatcher bookkeeping, not pool memory
@@ -168,6 +195,7 @@ class InferenceEngine:
 
         self.kv = PagedHeadCache(cfg, self.device_slots,
                                  page_size=engine_cfg.page_size)
+        self._kv_itemsize = int(self.kv.kpool.dtype.itemsize)
         self.hauler = MigrationScheduler({})
 
         self.queue: Deque[Request] = collections.deque()
@@ -177,35 +205,158 @@ class InferenceEngine:
         self.attn_reqs: Dict[int, AttnRequest] = {}
         self.finished: List[Request] = []
         self.clock = 0.0
-        self.metrics = {"migrated_bytes": 0.0, "evictions": 0,
-                        "redispatches": 0, "steps": 0,
-                        "h2d_bytes": 0.0, "d2h_bytes": 0.0,
-                        "prefill_h2d_bytes": 0.0, "prefill_chunks": 0,
-                        "ttft_p50": 0.0, "ttft_p95": 0.0}
-        self._ttfts: List[float] = []
+
+        # ------------------------------------------------------- telemetry
+        self.registry = MetricsRegistry()
+        self.tracer = Tracer(enabled=engine_cfg.telemetry,
+                             capacity=engine_cfg.trace_capacity)
+        self._trace_modules = (engine_cfg.telemetry
+                               and engine_cfg.trace_modules)
+        reg = self.registry
+        self._c_migr = reg.counter("migrated_bytes")
+        self._c_evict = reg.counter("evictions")
+        self._c_redisp = reg.counter("redispatches")
+        self._c_steps = reg.counter("steps")
+        self._c_h2d = reg.counter("h2d_bytes")
+        self._c_d2h = reg.counter("d2h_bytes")
+        self._c_pre_h2d = reg.counter("prefill_h2d_bytes")
+        self._c_chunks = reg.counter("prefill_chunks")
+        self._c_recompiles = reg.counter("jit/recompiles")
+        self._h_ttft = reg.histogram("ttft_s")
+        self._h_tpot = reg.histogram("tpot_s")
+        self._h_step = reg.histogram("step_latency_s")
+        self._h_attn_mod = reg.histogram("attn_module_s")
+        self._h_dense_mod = reg.histogram("dense_module_s")
+        self._g_h2d_gbps = reg.gauge("xfer/h2d_gbps")
+        # KV-pool occupancy / per-device memory gauges: callable-backed —
+        # evaluated at snapshot()/read time, zero cost per step
+        for did, part in self.kv.partitions.items():
+            reg.gauge(f"kv/device/{did}/used_slots",
+                      fn=(lambda p=part: float(p.used)))
+            reg.gauge(f"kv/device/{did}/used_bytes",
+                      fn=(lambda p=part, kv=self.kv:
+                          float(p.used * kv.bytes_per_slot())))
+        reg.gauge("kv/occupancy", fn=self._pool_occupancy)
+        # whether any measured module-span attribution has landed yet
+        self._measured_attn = False
+        # calibrated dense-module roofline efficiency (cost model); the
+        # 0.5 analytic prior is EWMA-updated from measured dense spans
+        self._dense_eff = 0.5
+        # backward-compatible mapping view over the registry (old flat
+        # dict interface; ttft percentiles computed lazily at read)
+        self.metrics = MetricsView({
+            "migrated_bytes": lambda: self._c_migr.value,
+            "evictions": lambda: self._c_evict.value,
+            "redispatches": lambda: self._c_redisp.value,
+            "steps": lambda: self._c_steps.value,
+            "h2d_bytes": lambda: self._c_h2d.value,
+            "d2h_bytes": lambda: self._c_d2h.value,
+            "prefill_h2d_bytes": lambda: self._c_pre_h2d.value,
+            "prefill_chunks": lambda: self._c_chunks.value,
+            "ttft_p50": lambda: self._h_ttft.percentile(50),
+            "ttft_p95": lambda: self._h_ttft.percentile(95),
+        })
 
         self.use_paged = (engine_cfg.decode_mode == "paged"
                           and T.supports_paged_decode(cfg))
         self.use_paged_prefill = (engine_cfg.prefill_mode == "paged"
                                   and T.supports_paged_prefill(cfg))
-        self._decode_fn = jax.jit(
-            lambda p, c, t: T.decode_step(cfg, p, c, t))
-        self._prefill_fn = jax.jit(
-            lambda p, b: T.prefill(cfg, p, b, max_seq=engine_cfg.max_seq))
+        self._decode_fn = count_recompiles(jax.jit(
+            lambda p, c, t: T.decode_step(cfg, p, c, t)),
+            self._c_recompiles)
+        self._prefill_fn = count_recompiles(jax.jit(
+            lambda p, b: T.prefill(cfg, p, b, max_seq=engine_cfg.max_seq)),
+            self._c_recompiles)
         # buffer donation lets XLA update the pools in place; CPU does not
         # support donation (harmless, but noisy), so only donate off-CPU.
         donate = (1, 2) if jax.default_backend() != "cpu" else ()
-        self._paged_fn = jax.jit(
+        self._paged_fn = count_recompiles(jax.jit(
             lambda p, kp, vp, bt, ln, ws, wo, t, pos: T.paged_decode_step(
                 cfg, p, kp, vp, bt, ln, ws, wo, t, pos),
-            donate_argnums=donate)
-        self._chunk_fn = jax.jit(
+            donate_argnums=donate), self._c_recompiles)
+        self._chunk_fn = count_recompiles(jax.jit(
             lambda p, kp, vp, bt, ln, st, ws, wo, t, li:
             T.paged_prefill_chunk(cfg, p, kp, vp, bt, ln, st, ws, wo, t,
                                   li),
-            donate_argnums=donate)
+            donate_argnums=donate), self._c_recompiles)
         self._decode_shapes: Set[Tuple[int, int]] = set()
         self._prefill_shapes: Set[Tuple[int, int, int]] = set()
+
+    # ------------------------------------------------------------- telemetry
+    def _pool_occupancy(self) -> float:
+        used = sum(p.used for p in self.kv.partitions.values())
+        total = sum(p.total for p in self.kv.partitions.values())
+        return used / total if total else 0.0
+
+    def snapshot(self, prefix: Optional[str] = None) -> Dict[str, float]:
+        """Typed metrics snapshot (see MetricsRegistry.snapshot) — the API
+        the dispatcher, hauler, and cost model calibration consume."""
+        return self.registry.snapshot(prefix)
+
+    def _module_span_args(self, reqs: List[Request]) -> Dict[str, float]:
+        """(h, g) annotation for attention spans: resident query heads and
+        resident KV bytes — the profiler's fit grid, from live traffic."""
+        cfg = self.cfg
+        ctx = sum(r.ctx_len for r in reqs)
+        kv_bytes = (ctx * 2 * cfg.n_kv_heads * cfg.head_dim
+                    * cfg.n_layers * self._kv_itemsize)
+        return {"heads": float(len(reqs) * cfg.n_heads),
+                "cache_bytes": float(kv_bytes)}
+
+    def _attribute_module_times(self, attn_s: float, dense_s: float
+                                ) -> None:
+        """Fold one probe step's measured module durations into telemetry:
+        module histograms, per-device measured-attention gauges (analytic
+        share of each device, rescaled by the measured aggregate, EWMA-
+        smoothed), and the calibrated dense roofline efficiency."""
+        if attn_s > 0.0:
+            self._h_attn_mod.observe(attn_s)
+            loaded = [w for w in self.workers
+                      if w.alive and (w.heads > 0 or w.cache_bytes > 0)]
+            if loaded and self.attn_reqs:
+                r0 = next(iter(self.attn_reqs.values()))
+                f = {w.device_id: w.f_time(r0.group_ratio, r0.head_dim,
+                                           r0.dtype_bytes) for w in loaded}
+                total_f = sum(f.values())
+                if total_f > 0.0:
+                    for did, fi in f.items():
+                        est = attn_s * fi / total_f
+                        self.registry.gauge(
+                            f"{ATTN_SNAPSHOT_PREFIX}{did}").ewma(est)
+                    self._measured_attn = True
+        if dense_s > 0.0:
+            self._h_dense_mod.observe(dense_s)
+            devs = {d.device_id: d for d in self.cluster.devices}
+            nb = max(1, len(self.running))
+            analytic = 0.0
+            for did in self.primary_ids:
+                cls = devs[did].cls
+                fl = (dense_flops_layer(self.profile, nb)
+                      * self.profile.n_layers / len(self.primary_ids))
+                analytic = max(analytic, fl / (cls.dense_tflops * 1e12))
+            self._dense_eff = calibrate_efficiency(
+                self._dense_eff, analytic, dense_s)
+
+    def _probe_totals(self) -> Tuple[float, float]:
+        """(attention, dense-module) aggregate span seconds so far — the
+        per-step delta isolates one probe call's module durations."""
+        t = self.tracer
+        return (t.total("attention"),
+                t.total("embed") + t.total("mlp") + t.total("lm_head"))
+
+    def _upload(self, host: Tuple[np.ndarray, ...], nbytes: int):
+        """Host arrays -> device.  When the module probe is on, the
+        transfer is timed (block_until_ready) and folded into the measured
+        h2d bandwidth gauge the hauler's link model calibrates from."""
+        if not self._trace_modules:
+            return tuple(jnp.asarray(a) for a in host)
+        t0 = time.perf_counter()
+        dev = tuple(jnp.asarray(a) for a in host)
+        jax.block_until_ready(dev)
+        dt = time.perf_counter() - t0
+        if dt > 0.0 and nbytes > 0:
+            self._g_h2d_gbps.ewma(nbytes / dt / 1e9)
+        return dev
 
     # -------------------------------------------------------- compile bounds
     def _max_pages(self) -> int:
@@ -268,7 +419,8 @@ class InferenceEngine:
                              n_heads=self.cfg.n_heads,
                              group_ratio=self.cfg.gqa_ratio,
                              head_dim=self.cfg.head_dim,
-                             dtype_bytes=4, arrival=req.arrival)
+                             dtype_bytes=self._kv_itemsize,
+                             arrival=req.arrival)
             placement = dispatch_lp(self.workers, [ar])
             if placement is None:
                 break
@@ -303,20 +455,17 @@ class InferenceEngine:
         return g == self.cfg.n_kv_heads
 
     # ---------------------------------------------------------------- prefill
-    def _record_ttft(self, ttft: float) -> None:
-        self._ttfts.append(ttft)
-        self.metrics["ttft_p50"] = float(np.percentile(self._ttfts, 50))
-        self.metrics["ttft_p95"] = float(np.percentile(self._ttfts, 95))
-
     def _prefill(self, req: Request) -> None:
         # a PREEMPTED request resumes with prompt + generated tokens as the
         # prefill input (teacher-forcing: identical K/V and next-token
         # logits to the decode steps it replays, so resumption stays exact)
         tokens = jnp.asarray(req.prompt + req.output, jnp.int32)[None]
         ctx = int(tokens.shape[1])
-        logits, cache = self._prefill_fn(self.params, {"tokens": tokens})
-        self.metrics["h2d_bytes"] += ctx * 4
-        self.metrics["prefill_h2d_bytes"] += ctx * 4
+        with self.tracer.span("prefill", args={"rid": req.rid, "ctx": ctx}):
+            logits, cache = self._prefill_fn(self.params, {"tokens": tokens})
+            self.tracer.sync(logits)
+        self._c_h2d.inc(tokens.nbytes)
+        self._c_pre_h2d.inc(tokens.nbytes)
         # bulk-store prompt K/V for all head groups: one device scatter,
         # no host round-trip of the cache contents
         kv = cache["groups"][0]
@@ -324,13 +473,13 @@ class InferenceEngine:
                                      kv["v"][:, 0, :ctx])
         req.prefill_pos = ctx
         first = int(np.argmax(np.asarray(logits[0])))
-        self.metrics["d2h_bytes"] += np.asarray(logits).nbytes
+        self._c_d2h.inc(np.asarray(logits).nbytes)
         req.output.append(first)
         # one token appended to every group's cache next decode step
         req.state = RequestState.RUNNING
         if req.ttft is None:
             req.ttft = self.clock - req.arrival
-            self._record_ttft(req.ttft)
+            self._h_ttft.observe(req.ttft)
         self.running.append(req)
         if req.done:        # max_new_tokens == 1, or resume filled the last
             self._finish(req)
@@ -378,17 +527,28 @@ class InferenceEngine:
                 chain = self.kv.block_table(r.rid, g)[:Pp]
                 tables[i, g, :len(chain)] = chain
         self._prefill_shapes.add((Bp, Cp, Pp))
-        logits, self.kv.kpool, self.kv.vpool = self._chunk_fn(
-            self.params, self.kv.kpool, self.kv.vpool,
-            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(starts),
-            jnp.asarray(wslots), jnp.asarray(woffs), jnp.asarray(toks),
-            jnp.asarray(last_idx))
-        h2d = (tables.nbytes + lengths.nbytes + starts.nbytes
-               + wslots.nbytes + woffs.nbytes + toks.nbytes
-               + last_idx.nbytes)
-        self.metrics["h2d_bytes"] += h2d
-        self.metrics["prefill_h2d_bytes"] += h2d
-        self.metrics["prefill_chunks"] += 1
+        host = (tables, lengths, starts, wslots, woffs, toks, last_idx)
+        h2d = sum(a.nbytes for a in host)
+        dev = self._upload(host, h2d)
+        with self.tracer.span("prefill_chunk",
+                              args={"batch": Bp, "chunk": Cp, "pages": Pp}):
+            if self._trace_modules:
+                a0, d0 = self._probe_totals()
+                logits, self.kv.kpool, self.kv.vpool = \
+                    T.paged_prefill_chunk_traced(
+                        cfg, self.params, self.kv.kpool, self.kv.vpool,
+                        *dev, tracer=self.tracer,
+                        span_args=self._module_span_args(
+                            [r for r, _, _ in spans]))
+                a1, d1 = self._probe_totals()
+                self._attribute_module_times(a1 - a0, d1 - d0)
+            else:
+                logits, self.kv.kpool, self.kv.vpool = self._chunk_fn(
+                    self.params, self.kv.kpool, self.kv.vpool, *dev)
+            self.tracer.sync(logits)
+        self._c_h2d.inc(h2d)
+        self._c_pre_h2d.inc(h2d)
+        self._c_chunks.inc()
         self.clock += self._model_prefill_time(
             sum(n for _, _, n in spans))
         nxt = None
@@ -398,14 +558,14 @@ class InferenceEngine:
                 continue
             if nxt is None:             # logits pulled once, on demand
                 nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-                self.metrics["d2h_bytes"] += logits.nbytes
+                self._c_d2h.inc(logits.nbytes)
             r.output.append(int(nxt[i]))
             r.state = RequestState.RUNNING
             self.prefilling.remove(r)
             self.running.append(r)
             if r.ttft is None:
                 r.ttft = self.clock - r.arrival
-                self._record_ttft(r.ttft)
+                self._h_ttft.observe(r.ttft)
             if r.done:      # max_new_tokens == 1, or resume filled the last
                 self._finish(r)
 
@@ -467,15 +627,27 @@ class InferenceEngine:
             pos[i] = p_new
             toks[i, 0] = r.output[-1]
         self._decode_shapes.add((Bp, Pp))
-        logits, self.kv.kpool, self.kv.vpool = self._paged_fn(
-            self.params, self.kv.kpool, self.kv.vpool,
-            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(wslot),
-            jnp.asarray(woff), jnp.asarray(toks), jnp.asarray(pos))
-        self.metrics["h2d_bytes"] += (tables.nbytes + lengths.nbytes
-                                      + wslot.nbytes + woff.nbytes
-                                      + pos.nbytes + toks.nbytes)
+        host = (tables, lengths, wslot, woff, toks, pos)
+        h2d = sum(a.nbytes for a in host)
+        dev = self._upload(host, h2d)
+        with self.tracer.span("paged_decode",
+                              args={"batch": Bp, "pages": Pp}):
+            if self._trace_modules:
+                a0, d0 = self._probe_totals()
+                logits, self.kv.kpool, self.kv.vpool = \
+                    T.paged_decode_step_traced(
+                        cfg, self.params, self.kv.kpool, self.kv.vpool,
+                        *dev, tracer=self.tracer,
+                        span_args=self._module_span_args(active))
+                a1, d1 = self._probe_totals()
+                self._attribute_module_times(a1 - a0, d1 - d0)
+            else:
+                logits, self.kv.kpool, self.kv.vpool = self._paged_fn(
+                    self.params, self.kv.kpool, self.kv.vpool, *dev)
+            self.tracer.sync(logits)
+        self._c_h2d.inc(h2d)
         nxt = np.asarray(jnp.argmax(logits[:B], axis=-1), np.int32)
-        self.metrics["d2h_bytes"] += logits.nbytes
+        self._c_d2h.inc(logits.nbytes)
         for r in active:
             # the reservation above already advanced kv.lengths; the jitted
             # step scattered the token K/V into those pages on device
@@ -505,14 +677,14 @@ class InferenceEngine:
             toks[i, 0] = r.output[-1]       # last generated token
         cache = {"groups": [{"k": jnp.asarray(K), "v": jnp.asarray(V)}],
                  "pos": jnp.asarray(pos)}
-        self.metrics["h2d_bytes"] += (K.nbytes + V.nbytes + pos.nbytes
-                                      + toks.nbytes)
-        logits, new_cache = self._decode_fn(self.params, cache,
-                                            jnp.asarray(toks))
+        self._c_h2d.inc(K.nbytes + V.nbytes + pos.nbytes + toks.nbytes)
+        with self.tracer.span("dense_decode", args={"batch": B}):
+            logits, new_cache = self._decode_fn(self.params, cache,
+                                                jnp.asarray(toks))
+            self.tracer.sync(logits)
         nk = np.asarray(new_cache["groups"][0]["k"])
         nv = np.asarray(new_cache["groups"][0]["v"])
-        self.metrics["d2h_bytes"] += (nk.nbytes + nv.nbytes
-                                      + np.asarray(logits).nbytes)
+        self._c_d2h.inc(nk.nbytes + nv.nbytes + np.asarray(logits).nbytes)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for i, r in enumerate(reqs):
             p = int(pos[i])
@@ -543,6 +715,9 @@ class InferenceEngine:
     def _finish(self, req: Request) -> None:
         req.state = RequestState.FINISHED
         req.finish_time = self.clock
+        if req.ttft is not None and len(req.output) > 1:
+            decode_s = max(0.0, (self.clock - req.arrival) - req.ttft)
+            self._h_tpot.observe(decode_s / (len(req.output) - 1))
         self.kv.release(req.rid)
         ar = self.attn_reqs.pop(req.rid, None)
         if ar is not None:
@@ -557,7 +732,7 @@ class InferenceEngine:
             theta=self.ecfg.theta)
         for d in decisions:
             self._apply_migration(d.request.rid, d.new_placement)
-            self.metrics["redispatches"] += 1
+            self._c_redisp.inc()
         for ar in evicted:
             req = next(r for r in self.running + self.prefilling
                        if r.rid == ar.rid)
@@ -577,7 +752,7 @@ class InferenceEngine:
             self.prefilling.remove(req)
         self.attn_reqs.pop(req.rid, None)
         self.queue.appendleft(req)
-        self.metrics["evictions"] += 1
+        self._c_evict.inc()
 
     def _apply_migration(self, rid: int, new_placement: Dict[int, int]
                          ) -> None:
@@ -592,34 +767,55 @@ class InferenceEngine:
         for grp, dev in self._group_devices(req):
             _, nbytes = self.kv.migrate_group(rid, grp, dev)
             moved_bytes += nbytes
-        self.metrics["migrated_bytes"] += moved_bytes
+        self._c_migr.inc(moved_bytes)
 
     # ------------------------------------------------------------------- step
     def step(self) -> Dict[str, float]:
-        admitted = self._try_admit()
-        for req in admitted:
-            req.prefill_start = self.clock
+        tr = self.tracer
+        t_wall = time.perf_counter() if tr.enabled else 0.0
+        with tr.span("step"):
+            with tr.span("admit"):
+                admitted = self._try_admit()
+            for req in admitted:
+                req.prefill_start = self.clock
+                if self.use_paged_prefill:
+                    # chunked: prompt writes spread over the next steps,
+                    # interleaved with decode — no head-of-line blocking
+                    self.prefilling.append(req)
+                else:
+                    self.clock += self._model_prefill_time(len(req.prompt))
+                    self._prefill(req)
             if self.use_paged_prefill:
-                # chunked: prompt writes spread over the next steps,
-                # interleaved with decode — no head-of-line blocking
-                self.prefilling.append(req)
-            else:
-                self.clock += self._model_prefill_time(len(req.prompt))
-                self._prefill(req)
-        if self.use_paged_prefill:
-            self._prefill_chunk_step()
-        self._decode_batch()
-        # Θ-triggered rebalance (at most one request per step, as in §5.3)
-        d = maybe_rebalance(self.workers, list(self.attn_reqs.values()),
-                            theta=self.ecfg.theta)
-        if d is not None:
-            self._apply_migration(d.request.rid, d.new_placement)
-            self.metrics["redispatches"] += 1
-        step_time = self._model_decode_time()
-        # migrations ride in the dense-compute overlap window (§6)
-        self.hauler.advance(step_time * 0.5)
-        self.clock += step_time
-        self.metrics["steps"] += 1
+                self._prefill_chunk_step()
+            self._decode_batch()
+            # Θ-triggered rebalance (at most one request per step, §5.3);
+            # once the module probe has attributed measured attention time,
+            # the dispatcher recalibrates from the snapshot first
+            snap = (self.snapshot(ATTN_SNAPSHOT_PREFIX)
+                    if self._measured_attn else None)
+            d = maybe_rebalance(self.workers, list(self.attn_reqs.values()),
+                                theta=self.ecfg.theta, snapshot=snap)
+            if d is not None:
+                with tr.span("rebalance", args={"rid": d.request.rid}):
+                    self._apply_migration(d.request.rid, d.new_placement)
+                self._c_redisp.inc()
+            attn_t, dense_t = self._model_decode_parts()
+            step_time = attn_t + dense_t
+            if tr.enabled:
+                # modeled module spans on the simulated-clock track
+                tr.add_span("attention_model", self.clock, attn_t,
+                            track="sim")
+                tr.add_span("dense_model", self.clock + attn_t, dense_t,
+                            track="sim")
+            # migrations ride in the dense-compute overlap window (§6);
+            # the link model follows the measured h2d bandwidth gauge
+            if self._g_h2d_gbps.value > 0.0:
+                self.hauler.calibrate_from_snapshot(self.snapshot("xfer/"))
+            self.hauler.advance(step_time * 0.5)
+            self.clock += step_time
+            self._c_steps.inc()
+        if tr.enabled:
+            self._h_step.observe(time.perf_counter() - t_wall)
         return {"clock": self.clock, "running": len(self.running),
                 "prefilling": len(self.prefilling),
                 "queued": len(self.queue)}
@@ -632,12 +828,15 @@ class InferenceEngine:
             cls = devs[did].cls
             fl = dense_flops_layer(self.profile, prompt_len) \
                 * self.profile.n_layers / len(self.primary_ids)
-            t = max(t, fl / (cls.dense_tflops * 1e12 * 0.5))
+            t = max(t, fl / (cls.dense_tflops * 1e12 * self._dense_eff))
         return t
 
-    def _model_decode_time(self) -> float:
+    def _model_decode_parts(self) -> Tuple[float, float]:
+        """(attention, dense) modeled step seconds; the dense term uses the
+        calibrated roofline efficiency (EWMA-updated from measured dense
+        module spans when the probe runs, 0.5 analytic prior otherwise)."""
         if not self.attn_reqs:
-            return 1e-4
+            return 1e-4, 0.0
         r0 = next(iter(self.attn_reqs.values()))
         attn_t = current_attention_time(self.workers, r0.group_ratio,
                                         r0.head_dim, r0.dtype_bytes)
@@ -648,7 +847,12 @@ class InferenceEngine:
             cls = devs[did].cls
             fl = dense_flops_layer(self.profile, nb) * self.profile.n_layers \
                 / len(self.primary_ids)
-            dense_t = max(dense_t, fl / (cls.dense_tflops * 1e12 * 0.5))
+            dense_t = max(dense_t, fl / (cls.dense_tflops * 1e12
+                                         * self._dense_eff))
+        return attn_t, dense_t
+
+    def _model_decode_time(self) -> float:
+        attn_t, dense_t = self._model_decode_parts()
         return attn_t + dense_t
 
     # ------------------------------------------------------------------- run

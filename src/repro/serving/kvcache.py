@@ -79,6 +79,12 @@ class PagedHeadCache:
         self.lengths: Dict[Tuple[int, int], int] = {}
 
     # -- helpers -------------------------------------------------------------
+    @classmethod
+    def pool_dtype(cls, cfg: ModelConfig) -> np.dtype:
+        """Physical pool dtype for a config — the single source of truth
+        for byte accounting (no hardcoded ``* 4`` itemsizes elsewhere)."""
+        return np.dtype(np.float32)
+
     def slots_per_token_group(self) -> float:
         return 1.0 / self.page
 

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.sim.systems import BaseSystem, LiveRequest
 from repro.sim.workloads import TraceRequest
+from repro.telemetry import Tracer
 
 
 @dataclasses.dataclass
@@ -26,6 +27,10 @@ class SimResult:
     finished: List[LiveRequest]
     duration: float
     timeline: List[Dict]                 # sampled state (Fig 14)
+    # simulated-clock span record: every decode iteration emits one
+    # "attention" and one "mlp" span on track "sim" tagged with the rids
+    # it covered — the single source of module-latency numbers (Fig 13)
+    tracer: Optional[Tracer] = None
 
     # ---- metrics ------------------------------------------------------------
     def _lat(self, r: LiveRequest) -> float:
@@ -62,7 +67,17 @@ class SimResult:
         return [r for r in self.finished if r.finish is not None]
 
     def p95_module(self, which: str) -> float:
-        vals = [getattr(r, which) / max(1, r.trace.output_len)
+        """P95 per-token module latency ("attention" or "mlp"), rebuilt
+        from the tracer's simulated-clock spans: each iteration span names
+        the rids it covered, so per-request totals fall out of the span
+        record instead of per-request accumulator fields."""
+        if self.tracer is None:
+            return float("nan")
+        per_rid: Dict[int, float] = {}
+        for sp in self.tracer.spans(which, track="sim"):
+            for rid in sp.args["rids"]:
+                per_rid[rid] = per_rid.get(rid, 0.0) + sp.dur
+        vals = [per_rid.get(r.rid, 0.0) / max(1, r.trace.output_len)
                 for r in self.served]
         return float(np.percentile(vals, 95)) if vals else float("nan")
 
@@ -75,7 +90,11 @@ class SimResult:
 def simulate(system: BaseSystem, trace: List[TraceRequest],
              workload: str = "", rate: float = 0.0,
              max_sim_seconds: float = 3600.0,
-             sample_every: int = 20) -> SimResult:
+             sample_every: int = 20,
+             tracer: Optional[Tracer] = None) -> SimResult:
+    # module spans are the simulator's only per-request module accounting,
+    # so the tracer is always on here (ring sized for hour-long runs)
+    tracer = tracer or Tracer(enabled=True, capacity=1 << 18)
     queue: List[LiveRequest] = [LiveRequest(t) for t in trace]
     queue.sort(key=lambda r: r.trace.arrival)
     clock = 0.0
@@ -138,11 +157,14 @@ def simulate(system: BaseSystem, trace: List[TraceRequest],
         # one decode iteration
         if system.running:
             total, attn_t, dense_t = system.decode_iteration()
+            rids = tuple(r.rid for r in system.running)
+            tracer.add_span("attention", clock, attn_t, track="sim",
+                            args={"rids": rids})
+            tracer.add_span("mlp", clock + attn_t, dense_t, track="sim",
+                            args={"rids": rids})
             clock += total
             for req in list(system.running):
                 req.generated += 1
-                req.attn_time += attn_t
-                req.mlp_time += dense_t
                 system.on_token(req)
                 if req.done:
                     req.finish = clock
@@ -167,4 +189,5 @@ def simulate(system: BaseSystem, trace: List[TraceRequest],
             timeline.append(snap)
         it += 1
 
-    return SimResult(system.name, workload, rate, finished, clock, timeline)
+    return SimResult(system.name, workload, rate, finished, clock, timeline,
+                     tracer)

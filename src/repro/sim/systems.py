@@ -53,9 +53,6 @@ class LiveRequest:
     prefilled: bool = False
     ttft: Optional[float] = None
     finish: Optional[float] = None
-    # module-level accounting (Fig 13)
-    attn_time: float = 0.0
-    mlp_time: float = 0.0
 
     @property
     def rid(self) -> int:
