@@ -1,6 +1,7 @@
-"""Decode-path benchmark: paged fast path vs the dense reference.
+"""Decode-path benchmark: paged fast path vs the dense reference, and the
+fused one-call schedule vs the split two-call schedule.
 
-For each mode the same workload runs through the engine; we report
+For each decode mode the same workload runs through the engine; we report
 
   engine/decode_step_<mode>     median wall time of one engine step (us)
   engine/h2d_per_step_<mode>    host->device bytes moved per decode step
@@ -9,6 +10,18 @@ For each mode the same workload runs through the engine; we report
   engine/telemetry_overhead_pct paged-step median with the tracer enabled
                                 vs disabled (disabled tracing must stay
                                 near zero cost)
+
+``--mode fused|split|both`` (default both) additionally runs the step-
+scheduling comparison: the same mixed prefill+decode workload through the
+fused packer (ONE jitted call per step, chunk autotuned against a TPOT
+SLO) and the split schedule (prefill-chunk call + decode call), reporting
+
+  engine/step_warm_<sched>            median warm (compile-free) step (us)
+  engine/dispatches_per_step_<sched>  jitted model calls per engine step
+                                      (asserted == 1 for fused)
+  engine/tpot_slo_violation_rate_<sched>  fraction of steady-state warm
+                                      steps over the TPOT SLO (SLO =
+                                      3x the calibrated warm median)
 
 ``--trace-out PATH`` writes the telemetry run's Chrome trace.  The dense
 path re-gathers every request's pages into a host tensor each step and
@@ -49,10 +62,12 @@ def build_model(smoke: bool):
 def run_mode(mode: str, cfg, params, prompts, new_tokens: int,
              telemetry: bool = False, trace_out=None, quiet: bool = False):
     cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
+    # pinned to the split schedule so decode_step_<mode> keeps measuring
+    # the decode call itself (the fused schedule is benchmarked below)
     eng = InferenceEngine(cfg, params, cl, primary_ids=[0], pool_ids=[1, 2],
                           engine_cfg=EngineConfig(
                               max_batch=8, max_seq=128, decode_mode=mode,
-                              telemetry=telemetry))
+                              step_mode="split", telemetry=telemetry))
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
     step_times = []
@@ -60,7 +75,7 @@ def run_mode(mode: str, cfg, params, prompts, new_tokens: int,
     h2d0 = rec0 = 0.0
     decode_steps = 0
     recompiles = eng.registry.counter("jit/recompiles")
-    while eng.queue or eng.running:
+    while eng.queue or eng.running or eng.prefilling:
         t0 = time.perf_counter()
         eng.step()
         dt = (time.perf_counter() - t0) * 1e6
@@ -97,10 +112,73 @@ def run_mode(mode: str, cfg, params, prompts, new_tokens: int,
     return med
 
 
+def run_sched(sched: str, cfg, params, prompts, new_tokens: int,
+              slo_s: float):
+    """One mixed prefill+decode workload through a step schedule; returns
+    warm-step stats + dispatch counts + SLO violation rate."""
+    cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
+    eng = InferenceEngine(cfg, params, cl, primary_ids=[0], pool_ids=[1, 2],
+                          engine_cfg=EngineConfig(
+                              max_batch=8, max_seq=128, step_mode=sched,
+                              prefill_chunk=16,
+                              tpot_slo_s=slo_s if sched == "fused" else 0.0))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
+    warm_times = []
+    rec0 = 0.0
+    recompiles = eng.registry.counter("jit/recompiles")
+    while eng.queue or eng.running or eng.prefilling:
+        t0 = time.perf_counter()
+        eng.step()
+        dt = time.perf_counter() - t0
+        if recompiles.value == rec0:         # no jit compile this step
+            warm_times.append(dt)
+        rec0 = recompiles.value
+        if eng.metrics["steps"] > 2000:
+            break
+    steps = max(1.0, eng.metrics["steps"])
+    warm = sorted(warm_times) or [0.0]
+    # steady state = the last half of warm steps (the autotuner has had
+    # its shrink/grow rounds by then)
+    steady = warm_times[len(warm_times) // 2:] or [0.0]
+    viol = sum(1 for t in steady if t > slo_s) / max(1, len(steady))
+    return {"med_warm_s": warm[len(warm) // 2],
+            "dispatches_per_step": eng.metrics["model_calls"] / steps,
+            "slo_violation_rate": viol,
+            "chunk_now": eng._chunk_now,
+            "finished": len(eng.finished)}
+
+
+def compare_schedules(cfg, params, prompts, new_tokens: int,
+                      modes) -> None:
+    # calibrate the TPOT SLO from a fused decode-heavy warm median: 3x
+    # headroom keeps the smoke check about the autotuner, not CPU noise
+    cal = run_sched("fused", cfg, params, prompts, new_tokens, slo_s=0.0)
+    slo_s = 3.0 * max(cal["med_warm_s"], 1e-6)
+    emit("engine/tpot_slo_s", slo_s, "3x calibrated fused warm median")
+    stats = {m: run_sched(m, cfg, params, prompts, new_tokens, slo_s)
+             for m in modes}
+    for m, s in stats.items():
+        emit(f"engine/step_warm_{m}", s["med_warm_s"] * 1e6,
+             f"us, finished={s['finished']}")
+        emit(f"engine/dispatches_per_step_{m}", s["dispatches_per_step"],
+             "jitted model calls / engine step")
+        emit(f"engine/tpot_slo_violation_rate_{m}", s["slo_violation_rate"],
+             f"steady-state warm steps over SLO (chunk_now={s['chunk_now']})")
+    if "fused" in stats:
+        # the acceptance contract: ONE jitted call per fused step, and the
+        # autotuner holds steady-state latency within the configured SLO
+        assert stats["fused"]["dispatches_per_step"] == 1.0, stats["fused"]
+        assert stats["fused"]["slo_violation_rate"] <= 0.5, stats["fused"]
+
+
 def main(argv=()) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes / few tokens for CI")
+    ap.add_argument("--mode", default="both",
+                    choices=("fused", "split", "both"),
+                    help="step schedules to benchmark side by side")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the telemetry run's Chrome trace here")
     args = ap.parse_args(list(argv))
@@ -115,6 +193,13 @@ def main(argv=()) -> None:
     dense = run_mode("dense", cfg, params, prompts, new_tokens)
     emit("engine/decode_speedup_dense_over_paged", dense / max(paged, 1e-9),
          "ratio (interpret-mode CPU; architectural, not TPU-grade)")
+    # fused vs split step scheduling on a mixed prefill+decode workload:
+    # longer prompts so chunked prefill actually overlaps running decode
+    sched_prompts = [[int(x) for x in rng.integers(0, cfg.vocab_size,
+                                                   rng.integers(8, 40))]
+                     for _ in range(n_req)]
+    modes = ("fused", "split") if args.mode == "both" else (args.mode,)
+    compare_schedules(cfg, params, sched_prompts, new_tokens, modes)
     # telemetry overhead: a longer decode run so warm (compile-free) steps
     # dominate, tracer off vs on, same workload
     ot = new_tokens * 4

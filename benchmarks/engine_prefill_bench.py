@@ -57,11 +57,13 @@ def run_mode(mode: str, cfg, params, prompts, new_tokens: int,
              max_seq: int, chunk: int,
              telemetry: bool = False, trace_out=None, quiet: bool = False):
     cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
+    # pinned to the split schedule: this bench isolates the prefill call
+    # itself (the fused schedule is covered by engine_decode_bench --mode)
     eng = InferenceEngine(cfg, params, cl, primary_ids=[0], pool_ids=[1, 2],
                           engine_cfg=EngineConfig(
                               max_batch=8, max_seq=max_seq,
                               prefill_mode=mode, prefill_chunk=chunk,
-                              telemetry=telemetry))
+                              step_mode="split", telemetry=telemetry))
     dense_stores = {"n": 0}
     orig_store = eng.kv.store_prompt_request
 

@@ -15,6 +15,9 @@ python -m benchmarks.kernels_bench --smoke
 echo "== engine decode bench (smoke) =="
 python -m benchmarks.engine_decode_bench --smoke
 
+echo "== fused-step smoke: 1 jitted call/step + SLO autotuner =="
+python -m benchmarks.engine_decode_bench --smoke --mode fused
+
 echo "== engine prefill bench (smoke) =="
 python -m benchmarks.engine_prefill_bench --smoke
 

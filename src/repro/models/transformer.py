@@ -537,36 +537,17 @@ def supports_paged_prefill(cfg: ModelConfig) -> bool:
         "audio_stub", "vision_stub")
 
 
-def paged_prefill_chunk(cfg: ModelConfig, params: Params,
-                        kpool: jax.Array, vpool: jax.Array,
-                        block_tables: jax.Array, lengths: jax.Array,
-                        starts: jax.Array, write_slots: jax.Array,
-                        write_offs: jax.Array, tokens: jax.Array,
-                        last_idx: jax.Array
-                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Prefill one (B, C) chunk of prompt tokens against the paged pools.
-
-    The prefill symmetric of ``paged_decode_step``: dense QKV/MLP run on
-    the whole chunk, each layer scatters the chunk's K/V **directly into
-    the device-resident pools** via (slot, offset) index arrays, and the
-    chunked-prefill Pallas kernel attends causally through the block
-    tables.  The dense ``(L, 1, max_seq, ...)`` intermediate cache of the
-    ``prefill`` + ``store_prompt_request`` path never exists; per-request
-    prompts are decomposed into chunks by the engine so several requests'
-    chunks batch into one jitted call, shapes pow2-bucketed in (B, C,
-    max_pages) to bound compiles by ``prefill_bucket_count()``.
-
-    tokens:     (B, C) int32 chunk tokens (0-padded rows/tails)
-    starts:     (B,) absolute position of tokens[:, 0] (prefix length)
-    lengths:    (B,) tokens stored after this chunk's writes (0 pads rows)
-    last_idx:   (B,) in-chunk index of each row's last valid token; the
-                returned logits are for that token (only meaningful for
-                rows whose chunk completes the prompt)
-    other operands documented in ``attn.gqa_prefill_paged``.
-    Returns (last-token logits (B, vocab), kpool, vpool).
-    """
-    assert supports_paged_prefill(cfg), \
-        "config not supported by paged prefill"
+def _paged_chunk_forward(cfg: ModelConfig, params: Params,
+                         kpool: jax.Array, vpool: jax.Array,
+                         block_tables: jax.Array, lengths: jax.Array,
+                         starts: jax.Array, write_slots: jax.Array,
+                         write_offs: jax.Array, tokens: jax.Array,
+                         last_idx: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared body of ``paged_prefill_chunk`` and ``paged_fused_step``:
+    embed a (B, C) token block, scatter its K/V into the pools, run the
+    chunked-prefill Pallas kernel causally through the block tables, and
+    return each row's last-valid-token logits."""
     x = jnp.take(params["embed"], tokens, axis=0)
     x = logical(x, "batch", "seq", "embed")
     C = tokens.shape[1]
@@ -602,17 +583,15 @@ def paged_prefill_chunk(cfg: ModelConfig, params: Params,
     return logits, kpool, vpool
 
 
-def paged_prefill_chunk_traced(cfg: ModelConfig, params: Params,
-                               kpool: jax.Array, vpool: jax.Array,
-                               block_tables: jax.Array, lengths: jax.Array,
-                               starts: jax.Array, write_slots: jax.Array,
-                               write_offs: jax.Array, tokens: jax.Array,
-                               last_idx: jax.Array, tracer, span_args=None
-                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Instrumented twin of ``paged_prefill_chunk`` — eager layer loop with
-    per-module Attention / MLP spans (see ``paged_decode_step_traced``)."""
-    assert supports_paged_prefill(cfg), \
-        "config not supported by paged prefill"
+def _paged_chunk_forward_traced(cfg: ModelConfig, params: Params,
+                                kpool: jax.Array, vpool: jax.Array,
+                                block_tables: jax.Array, lengths: jax.Array,
+                                starts: jax.Array, write_slots: jax.Array,
+                                write_offs: jax.Array, tokens: jax.Array,
+                                last_idx: jax.Array, tracer, span_args=None
+                                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Instrumented twin of ``_paged_chunk_forward`` — eager Python loop
+    over layers with one device-sync'd tracer span per module."""
     with tracer.span("embed"):
         x = jnp.take(params["embed"], tokens, axis=0)
         x = logical(x, "batch", "seq", "embed")
@@ -649,6 +628,123 @@ def paged_prefill_chunk_traced(cfg: ModelConfig, params: Params,
         logits = logical(logits, "batch", "vocab")
         tracer.sync(logits)
     return logits, kpool, vpool
+
+
+def paged_prefill_chunk(cfg: ModelConfig, params: Params,
+                        kpool: jax.Array, vpool: jax.Array,
+                        block_tables: jax.Array, lengths: jax.Array,
+                        starts: jax.Array, write_slots: jax.Array,
+                        write_offs: jax.Array, tokens: jax.Array,
+                        last_idx: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill one (B, C) chunk of prompt tokens against the paged pools.
+
+    The prefill symmetric of ``paged_decode_step``: dense QKV/MLP run on
+    the whole chunk, each layer scatters the chunk's K/V **directly into
+    the device-resident pools** via (slot, offset) index arrays, and the
+    chunked-prefill Pallas kernel attends causally through the block
+    tables.  The dense ``(L, 1, max_seq, ...)`` intermediate cache of the
+    ``prefill`` + ``store_prompt_request`` path never exists; per-request
+    prompts are decomposed into chunks by the engine so several requests'
+    chunks batch into one jitted call, shapes pow2-bucketed in (B, C,
+    max_pages) to bound compiles by ``prefill_bucket_count()``.
+
+    tokens:     (B, C) int32 chunk tokens (0-padded rows/tails)
+    starts:     (B,) absolute position of tokens[:, 0] (prefix length)
+    lengths:    (B,) tokens stored after this chunk's writes (0 pads rows)
+    last_idx:   (B,) in-chunk index of each row's last valid token; the
+                returned logits are for that token (only meaningful for
+                rows whose chunk completes the prompt)
+    other operands documented in ``attn.gqa_prefill_paged``.
+    Returns (last-token logits (B, vocab), kpool, vpool).
+    """
+    assert supports_paged_prefill(cfg), \
+        "config not supported by paged prefill"
+    return _paged_chunk_forward(cfg, params, kpool, vpool, block_tables,
+                                lengths, starts, write_slots, write_offs,
+                                tokens, last_idx)
+
+
+def supports_fused_step(cfg: ModelConfig) -> bool:
+    """The fused prefill+decode step needs BOTH paged paths: decode rows
+    are degenerate chunks through the chunked-prefill kernel family."""
+    return supports_paged_decode(cfg) and supports_paged_prefill(cfg)
+
+
+def paged_fused_step(cfg: ModelConfig, params: Params,
+                     kpool: jax.Array, vpool: jax.Array,
+                     block_tables: jax.Array, lengths: jax.Array,
+                     starts: jax.Array, write_slots: jax.Array,
+                     write_offs: jax.Array, tokens: jax.Array,
+                     last_idx: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """ONE jitted call serving a mixed prefill+decode row batch.
+
+    The row batch (B, C) packs two kinds of rows, distinguished purely by
+    their per-row SMEM scalars — the kernel never branches on row kind:
+
+      * **decode rows** — the degenerate chunk: one valid token (the last
+        generated one) at ``starts[i] == ctx - 1``, ``lengths[i] == ctx``,
+        ``last_idx[i] == 0``.  The causal mask ``k_pos <= q_pos`` plus the
+        length mask reduce exactly to decode attention over the stored
+        context, and the single-token K/V scatter is the decode-step pool
+        write.
+      * **prefill rows** — a ≤C-token prompt chunk, exactly as in
+        ``paged_prefill_chunk``.
+
+    Because decode is the C=1 special case of the chunk math, the fused
+    step shares ``_paged_chunk_forward`` with the prefill path: same layer
+    scan, same scatter, same Pallas kernel — so token streams are
+    bit-identical to the two-call split schedule while the engine pays ONE
+    dispatch per iteration instead of two.  Shapes are pow2-bucketed in
+    (B, C, max_pages); the compile universe is
+    ``InferenceEngine.fused_bucket_count()``.
+
+    Operand layouts are identical to ``paged_prefill_chunk``; padded rows
+    carry ``lengths == 0`` and write to the sink slot.
+    Returns (last-valid-token logits (B, vocab), kpool, vpool).
+    """
+    assert supports_fused_step(cfg), "config not supported by fused step"
+    return _paged_chunk_forward(cfg, params, kpool, vpool, block_tables,
+                                lengths, starts, write_slots, write_offs,
+                                tokens, last_idx)
+
+
+def paged_fused_step_traced(cfg: ModelConfig, params: Params,
+                            kpool: jax.Array, vpool: jax.Array,
+                            block_tables: jax.Array, lengths: jax.Array,
+                            starts: jax.Array, write_slots: jax.Array,
+                            write_offs: jax.Array, tokens: jax.Array,
+                            last_idx: jax.Array, tracer, span_args=None
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Instrumented twin of ``paged_fused_step`` — eager layer loop with
+    per-module Attention / MLP spans.  ``span_args`` should carry the
+    per-phase row/token split (``decode_rows``/``prefill_tokens``...) so
+    span consumers can attribute one call's time to both phases; the
+    engine additionally emits proportional ``fused/<phase>`` child spans
+    (see ``Tracer.add_phase_spans``)."""
+    assert supports_fused_step(cfg), "config not supported by fused step"
+    return _paged_chunk_forward_traced(cfg, params, kpool, vpool,
+                                       block_tables, lengths, starts,
+                                       write_slots, write_offs, tokens,
+                                       last_idx, tracer, span_args)
+
+
+def paged_prefill_chunk_traced(cfg: ModelConfig, params: Params,
+                               kpool: jax.Array, vpool: jax.Array,
+                               block_tables: jax.Array, lengths: jax.Array,
+                               starts: jax.Array, write_slots: jax.Array,
+                               write_offs: jax.Array, tokens: jax.Array,
+                               last_idx: jax.Array, tracer, span_args=None
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Instrumented twin of ``paged_prefill_chunk`` — eager layer loop with
+    per-module Attention / MLP spans (see ``paged_decode_step_traced``)."""
+    assert supports_paged_prefill(cfg), \
+        "config not supported by paged prefill"
+    return _paged_chunk_forward_traced(cfg, params, kpool, vpool,
+                                       block_tables, lengths, starts,
+                                       write_slots, write_offs, tokens,
+                                       last_idx, tracer, span_args)
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Cache,

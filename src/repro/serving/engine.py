@@ -54,6 +54,29 @@ default):
     ``store_prompt_request`` per request — kept as the token-exactness
     oracle and for MLA/ssm configs.
 
+Fused prefill+decode step (``EngineConfig.step_mode == "fused"``,
+default whenever both paged paths apply):
+
+  * Each iteration issues ONE jitted ``transformer.paged_fused_step``
+    call whose row batch mixes decode rows (the degenerate chunk: one
+    token at position ``ctx - 1``) and prefill rows (chunks of ≤ C prompt
+    tokens), driven entirely by the per-row ``starts``/``lengths`` SMEM
+    scalars of the chunked-prefill kernel — per-step dispatch drops from
+    two jitted calls to one while token streams stay bit-identical to the
+    split schedule (``step_mode == "split"``, kept as the fallback and
+    exactness oracle).
+  * The scheduler is a **token-budget packer**: every step has a budget
+    ``B_tok`` (``token_budget``, default ``max_batch + prefill_chunk``);
+    decode rows are always admitted (one token each) and the remainder is
+    packed with prefill chunk tokens FCFS, at most ``chunk_now`` per
+    request.
+  * ``chunk_now`` is **autotuned** against a decode TPOT SLO
+    (``tpot_slo_s``): warm (compile-free) fused-step wall latencies feed a
+    telemetry ``Histogram``; when its EWMA overruns the SLO the chunk
+    halves, and when there is ≥2x headroom it doubles back — pow2-clamped
+    to ``[1, prefill_chunk]`` so the fused ``(B, C, P)`` bucket universe
+    stays enumerable via ``fused_bucket_count()``.
+
 Telemetry (``repro.telemetry``): a typed :class:`MetricsRegistry` replaces
 the old flat metrics dict — byte counters are computed from the actual
 array dtypes, TTFT/TPOT/step-latency are histograms whose percentiles are
@@ -80,6 +103,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
@@ -140,6 +164,23 @@ class EngineConfig:
     # prefill + store_prompt_request (token-exactness oracle).
     prefill_mode: str = "paged"
     prefill_chunk: int = 32         # max prompt tokens per chunk (pow2)
+    # "fused": ONE jitted paged_fused_step per iteration packs decode rows
+    # (always admitted) and prefill chunk tokens into a single row batch
+    # under the token budget; "split": the two-call schedule (one prefill
+    # chunk call + one decode call per step) — kept as fallback/oracle.
+    # Fused requires both paged paths; unsupported configs fall back.
+    step_mode: str = "fused"
+    # per-step token budget for the fused packer; 0 = auto
+    # (max_batch decode tokens + prefill_chunk prompt tokens)
+    token_budget: int = 0
+    # decode TPOT SLO (seconds of warm fused-step wall latency) driving
+    # the per-step prefill chunk autotuner; 0 = autotuner off (chunk
+    # stays at prefill_chunk).  Timing the step costs a device sync, so
+    # only enable when an SLO is actually configured.
+    tpot_slo_s: float = 0.0
+    # fraction of the modeled step time handed to the migration hauler as
+    # compute-overlap window (§6); 0.5 = migrations ride in half the step
+    migration_overlap: float = 0.5
     # tracing: off by default (disabled tracer is zero-cost — no per-step
     # allocations); the MetricsRegistry is always on.
     telemetry: bool = False
@@ -164,7 +205,7 @@ class InferenceEngine:
         self.profile = cfg.profile()
 
         # Dispatcher worker states from analytic profiler models
-        devs = {d.device_id: d for d in cluster.devices}
+        devs = self._devs
         self.workers: List[WorkerState] = []
         # bytes per pool slot from the pool's actual dtype (no hardcoded
         # "* 4": bf16/fp32 configs report what the arrays really occupy)
@@ -222,6 +263,15 @@ class InferenceEngine:
         self._c_pre_h2d = reg.counter("prefill_h2d_bytes")
         self._c_chunks = reg.counter("prefill_chunks")
         self._c_recompiles = reg.counter("jit/recompiles")
+        # fused-step scheduler instruments: jitted model dispatches per
+        # step, fused iterations, warm (recompile-free) fused latencies
+        # feeding the chunk autotuner, SLO overruns, undrained exits
+        self._c_model_calls = reg.counter("model_calls")
+        self._c_fused = reg.counter("fused_steps")
+        self._c_slo_viol = reg.counter("tpot_slo_violations")
+        self._c_undrained = reg.counter("run_undrained")
+        self._h_fused_warm = reg.histogram("fused_warm_step_s")
+        reg.gauge("prefill/chunk_now", fn=lambda: float(self._chunk_now))
         self._h_ttft = reg.histogram("ttft_s")
         self._h_tpot = reg.histogram("tpot_s")
         self._h_step = reg.histogram("step_latency_s")
@@ -253,6 +303,8 @@ class InferenceEngine:
             "d2h_bytes": lambda: self._c_d2h.value,
             "prefill_h2d_bytes": lambda: self._c_pre_h2d.value,
             "prefill_chunks": lambda: self._c_chunks.value,
+            "model_calls": lambda: self._c_model_calls.value,
+            "fused_steps": lambda: self._c_fused.value,
             "ttft_p50": lambda: self._h_ttft.percentile(50),
             "ttft_p95": lambda: self._h_ttft.percentile(95),
         })
@@ -279,8 +331,36 @@ class InferenceEngine:
             T.paged_prefill_chunk(cfg, p, kp, vp, bt, ln, st, ws, wo, t,
                                   li),
             donate_argnums=donate), self._c_recompiles)
+        self._fused_fn = count_recompiles(jax.jit(
+            lambda p, kp, vp, bt, ln, st, ws, wo, t, li:
+            T.paged_fused_step(cfg, p, kp, vp, bt, ln, st, ws, wo, t, li),
+            donate_argnums=donate), self._c_recompiles)
         self._decode_shapes: Set[Tuple[int, int]] = set()
         self._prefill_shapes: Set[Tuple[int, int, int]] = set()
+        self._fused_shapes: Set[Tuple[int, int, int]] = set()
+        # fused mode needs BOTH paged paths (decode rows and prefill rows
+        # share the chunked-prefill kernel); otherwise fall back to split
+        self.use_fused = (engine_cfg.step_mode == "fused"
+                          and self.use_paged and self.use_paged_prefill
+                          and T.supports_fused_step(cfg))
+        # autotuned per-step prefill chunk, pow2 in [1, prefill_chunk]
+        self._chunk_now = _bucket(engine_cfg.prefill_chunk)
+
+    # --------------------------------------------------------------- cluster
+    # ``cluster`` is a property so the device_id -> Device map the modeled-
+    # time helpers consume is precomputed once and invalidated only when
+    # the cluster actually changes (it used to be rebuilt from
+    # ``cluster.devices`` on every `_model_prefill_time` /
+    # `_model_decode_parts` call — a per-step dict build).
+    @property
+    def cluster(self) -> ClusterSpec:
+        return self._cluster
+
+    @cluster.setter
+    def cluster(self, cluster: ClusterSpec) -> None:
+        self._cluster = cluster
+        self._devs: Dict[int, Device] = {d.device_id: d
+                                         for d in cluster.devices}
 
     # ------------------------------------------------------------- telemetry
     def _pool_occupancy(self) -> float:
@@ -326,7 +406,7 @@ class InferenceEngine:
                     self._measured_attn = True
         if dense_s > 0.0:
             self._h_dense_mod.observe(dense_s)
-            devs = {d.device_id: d for d in self.cluster.devices}
+            devs = self._devs
             nb = max(1, len(self.running))
             analytic = 0.0
             for did in self.primary_ids:
@@ -375,6 +455,16 @@ class InferenceEngine:
                 for c in _pow2s(self.ecfg.prefill_chunk)
                 for p in _pow2s(self._max_pages())]
 
+    def fused_bucket_shapes(self) -> List[Tuple[int, int, int]]:
+        """Every (batch-bucket, chunk-bucket, pages-bucket) shape the
+        fused step can be jitted at.  The chunk axis spans the FULL
+        ``prefill_chunk`` universe — the autotuner only moves
+        ``chunk_now`` along pow2 values inside it (decode-only steps land
+        on chunk bucket 1, the degenerate chunk)."""
+        return [(b, c, p) for b in _pow2s(self.ecfg.max_batch)
+                for c in _pow2s(self.ecfg.prefill_chunk)
+                for p in _pow2s(self._max_pages())]
+
     def bucket_count(self) -> int:
         """Upper bound on paged-decode jit compilations: one per
         (batch-bucket, pages-bucket) pair."""
@@ -398,6 +488,18 @@ class InferenceEngine:
             return int(self._chunk_fn._cache_size())
         except Exception:               # jax without _cache_size
             return len(self._prefill_shapes)
+
+    def fused_bucket_count(self) -> int:
+        """Upper bound on fused-step jit compilations: one per
+        (batch-bucket, chunk-bucket, pages-bucket) triple."""
+        return len(self.fused_bucket_shapes())
+
+    def fused_compile_count(self) -> int:
+        """Actual number of fused-step compilations so far."""
+        try:
+            return int(self._fused_fn._cache_size())
+        except Exception:               # jax without _cache_size
+            return len(self._fused_shapes)
 
     # ------------------------------------------------------------------ admit
     def submit(self, req: Request) -> None:
@@ -464,6 +566,7 @@ class InferenceEngine:
         with self.tracer.span("prefill", args={"rid": req.rid, "ctx": ctx}):
             logits, cache = self._prefill_fn(self.params, {"tokens": tokens})
             self.tracer.sync(logits)
+        self._c_model_calls.inc()
         self._c_h2d.inc(tokens.nbytes)
         self._c_pre_h2d.inc(tokens.nbytes)
         # bulk-store prompt K/V for all head groups: one device scatter,
@@ -546,6 +649,7 @@ class InferenceEngine:
                 logits, self.kv.kpool, self.kv.vpool = self._chunk_fn(
                     self.params, self.kv.kpool, self.kv.vpool, *dev)
             self.tracer.sync(logits)
+        self._c_model_calls.inc()
         self._c_h2d.inc(h2d)
         self._c_pre_h2d.inc(h2d)
         self._c_chunks.inc()
@@ -579,13 +683,12 @@ class InferenceEngine:
         else:
             self._decode_batch_dense(reqs)
 
-    def _decode_batch_paged(self, reqs: List[Request]) -> None:
-        """Fast path: block tables + device-resident pools, no gather."""
-        cfg = self.cfg
-        Hkv, page = cfg.n_kv_heads, self.kv.page
-        # reserve page room for this step's token in every group chain;
-        # exhaustion triggers §5.3 handling, which may preempt requests
-        # (possibly the one being reserved) out of this step's batch
+    def _reserve_decode_rows(self, reqs: List[Request]) -> List[Request]:
+        """Reserve page room for this step's token in every group chain;
+        exhaustion triggers §5.3 handling, which may preempt requests
+        (possibly the one being reserved, possibly a prefilling one) out
+        of this step's batch.  Returns the rows that survived with
+        capacity in hand."""
         active: List[Request] = []
         for r in reqs:
             if r not in self.running:
@@ -602,7 +705,13 @@ class InferenceEngine:
                     break
             if ok and r in self.running:
                 active.append(r)
-        active = [r for r in active if r in self.running]
+        return [r for r in active if r in self.running]
+
+    def _decode_batch_paged(self, reqs: List[Request]) -> None:
+        """Fast path: block tables + device-resident pools, no gather."""
+        cfg = self.cfg
+        Hkv, page = cfg.n_kv_heads, self.kv.page
+        active = self._reserve_decode_rows(reqs)
         if not active:
             return
         B = len(active)
@@ -645,6 +754,7 @@ class InferenceEngine:
                 logits, self.kv.kpool, self.kv.vpool = self._paged_fn(
                     self.params, self.kv.kpool, self.kv.vpool, *dev)
             self.tracer.sync(logits)
+        self._c_model_calls.inc()
         self._c_h2d.inc(h2d)
         nxt = np.asarray(jnp.argmax(logits[:B], axis=-1), np.int32)
         self._c_d2h.inc(logits.nbytes)
@@ -682,6 +792,7 @@ class InferenceEngine:
             logits, new_cache = self._decode_fn(self.params, cache,
                                                 jnp.asarray(toks))
             self.tracer.sync(logits)
+        self._c_model_calls.inc()
         nk = np.asarray(new_cache["groups"][0]["k"])
         nv = np.asarray(new_cache["groups"][0]["v"])
         self._c_d2h.inc(nk.nbytes + nv.nbytes + np.asarray(logits).nbytes)
@@ -702,6 +813,159 @@ class InferenceEngine:
             r.output.append(int(nxt[i]))
             if r.done:
                 self._finish(r)
+
+    # ------------------------------------------------------------ fused step
+    def _fused_step(self) -> None:
+        """ONE jitted ``paged_fused_step`` call per iteration: the row
+        batch mixes decode rows (the degenerate chunk — one token at
+        position ``ctx - 1``) and prefill rows (FCFS chunks of ≤
+        ``chunk_now`` prompt tokens), packed under the per-step token
+        budget.  Decode rows are always admitted; prefill tokens fill the
+        remainder.  Token streams are identical to the split schedule —
+        only the step a finished prefill row starts decoding on shifts by
+        one (it joins ``running`` after this call instead of decoding in
+        the same iteration's second call)."""
+        cfg = self.cfg
+        Hkv, page = cfg.n_kv_heads, self.kv.page
+        # reserve decode capacity FIRST: §5.3 handling inside may preempt
+        # prefilling requests, which must not be in this step's row batch
+        dec = self._reserve_decode_rows(
+            [r for r in self.running if not r.done])
+        budget = self.ecfg.token_budget or (self.ecfg.max_batch
+                                            + self.ecfg.prefill_chunk)
+        left = budget - len(dec)        # decode rows always admitted
+        spans: List[Tuple[Request, List[int], int]] = []
+        for r in self.prefilling:
+            if left <= 0:
+                break
+            full = r.prompt + r.output
+            n = min(self._chunk_now, len(full) - r.prefill_pos, left)
+            if n <= 0:
+                break
+            spans.append((r, full, n))
+            left -= n
+        if not dec and not spans:
+            return
+        rows = ([(r.rid, r.ctx_len - 1, 1) for r in dec]
+                + [(r.rid, r.prefill_pos, n) for r, _, n in spans])
+        B = len(rows)
+        Bp = _bucket(B)
+        Cp = _bucket(max(n for _, _, n in rows))
+        maxp = max(-(-(s + n) // page) for _, s, n in rows)
+        Pp = _bucket(maxp)
+        sink = self.kv.sink
+        toks = np.zeros((Bp, Cp), np.int32)
+        starts = np.zeros((Bp,), np.int32)
+        lengths = np.zeros((Bp,), np.int32)
+        last_idx = np.zeros((Bp,), np.int32)
+        tables = np.full((Bp, Hkv, Pp), sink, np.int32)
+        ws, wo = self.kv.mixed_scatter_indices(rows, Cp)
+        wslots = np.full((Bp, Hkv, Cp), sink, np.int32)
+        woffs = np.zeros((Bp, Cp), np.int32)
+        wslots[:B] = ws
+        woffs[:B] = wo
+        for i, (rid, s0, n) in enumerate(rows):
+            starts[i] = s0
+            lengths[i] = s0 + n
+            last_idx[i] = n - 1
+            # the chain covers the FULL prompt; the kernel only reads
+            # pages with base < lengths[i], all within the first Pp
+            tables[i] = self.kv.block_table_matrix(rid, Pp)
+        for i, r in enumerate(dec):
+            toks[i, 0] = r.output[-1]
+        for j, (r, full, n) in enumerate(spans):
+            toks[len(dec) + j, :n] = full[r.prefill_pos:r.prefill_pos + n]
+        self._fused_shapes.add((Bp, Cp, Pp))
+        host = (tables, lengths, starts, wslots, woffs, toks, last_idx)
+        h2d = sum(a.nbytes for a in host)
+        dev = self._upload(host, h2d)
+        tr = self.tracer
+        n_pre = sum(n for _, _, n in spans)
+        # timing the step for the autotuner costs a device sync, so only
+        # pay it when an SLO is configured (the eager probe already syncs)
+        time_it = self.ecfg.tpot_slo_s > 0.0 and not self._trace_modules
+        rc0 = self._c_recompiles.value
+        with tr.span("fused_step", args={"batch": Bp, "chunk": Cp,
+                                         "pages": Pp,
+                                         "decode_rows": len(dec),
+                                         "prefill_tokens": n_pre}):
+            t0 = time.perf_counter() if (tr.enabled or time_it) else 0.0
+            if self._trace_modules:
+                a0, d0 = self._probe_totals()
+                logits, self.kv.kpool, self.kv.vpool = \
+                    T.paged_fused_step_traced(
+                        cfg, self.params, self.kv.kpool, self.kv.vpool,
+                        *dev, tracer=tr,
+                        span_args=self._module_span_args(
+                            dec + [r for r, _, _ in spans]))
+                a1, d1 = self._probe_totals()
+                self._attribute_module_times(a1 - a0, d1 - d0)
+            else:
+                logits, self.kv.kpool, self.kv.vpool = self._fused_fn(
+                    self.params, self.kv.kpool, self.kv.vpool, *dev)
+            tr.sync(logits)
+            if tr.enabled or time_it:
+                if not tr.enabled:          # sync() above was a no-op
+                    jax.block_until_ready(logits)
+                dt = time.perf_counter() - t0
+                if tr.enabled:
+                    # attribute the ONE measured call to its phases by
+                    # token share — both phases ran inside a single jit
+                    tr.add_phase_spans(
+                        "fused/", t0, dt,
+                        {"decode": float(len(dec)),
+                         "prefill": float(n_pre)},
+                        depth=len(tr._stack))
+                if time_it and self._c_recompiles.value == rc0:
+                    self._autotune_chunk(dt)
+        self._c_model_calls.inc()
+        self._c_fused.inc()
+        self._c_h2d.inc(h2d)
+        if spans:
+            self._c_pre_h2d.inc(h2d)
+            self._c_chunks.inc()
+            self.clock += self._model_prefill_time(n_pre)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._c_d2h.inc(logits.nbytes)
+        for r in dec:
+            # the reservation already advanced kv.lengths; the jitted
+            # step scattered the token K/V into those pages on device
+            grow_context(self.workers, self.attn_reqs[r.rid], 1)
+        for i, r in enumerate(dec):
+            r.output.append(int(nxt[i]))
+            if r.done:
+                self._finish(r)
+        for j, (r, full, n) in enumerate(spans):
+            r.prefill_pos += n
+            if r.prefill_pos < len(full):
+                continue
+            r.output.append(int(nxt[len(dec) + j]))
+            r.state = RequestState.RUNNING
+            self.prefilling.remove(r)
+            self.running.append(r)
+            if r.ttft is None:
+                r.ttft = self.clock - r.arrival
+                self._h_ttft.observe(r.ttft)
+            if r.done:      # max_new_tokens == 1, or resume filled the last
+                self._finish(r)
+
+    def _autotune_chunk(self, warm_s: float) -> None:
+        """Feed one warm (recompile-free) fused-step wall latency to the
+        chunk autotuner: when the EWMA overruns the decode TPOT SLO the
+        prefill chunk halves (shed prompt work from the iteration); with
+        ≥2x headroom it doubles back.  Pow2 moves clamped to
+        [1, prefill_chunk] keep every reachable shape inside
+        ``fused_bucket_shapes()``."""
+        self._h_fused_warm.observe(warm_s)
+        slo = self.ecfg.tpot_slo_s
+        if warm_s > slo:
+            self._c_slo_viol.inc()
+        ew = self._h_fused_warm.ewma
+        if ew > slo and self._chunk_now > 1:
+            self._chunk_now //= 2
+        elif (ew < 0.5 * slo
+              and self._chunk_now < _bucket(self.ecfg.prefill_chunk)):
+            self._chunk_now *= 2
 
     def _group_devices(self, req: Request):
         out = []
@@ -785,9 +1049,13 @@ class InferenceEngine:
                 else:
                     self.clock += self._model_prefill_time(len(req.prompt))
                     self._prefill(req)
-            if self.use_paged_prefill:
-                self._prefill_chunk_step()
-            self._decode_batch()
+            if self.use_fused:
+                # ONE jitted call packs decode rows + prefill chunks
+                self._fused_step()
+            else:
+                if self.use_paged_prefill:
+                    self._prefill_chunk_step()
+                self._decode_batch()
             # Θ-triggered rebalance (at most one request per step, §5.3);
             # once the module probe has attributed measured attention time,
             # the dispatcher recalibrates from the snapshot first
@@ -811,7 +1079,7 @@ class InferenceEngine:
             # the link model follows the measured h2d bandwidth gauge
             if self._g_h2d_gbps.value > 0.0:
                 self.hauler.calibrate_from_snapshot(self.snapshot("xfer/"))
-            self.hauler.advance(step_time * 0.5)
+            self.hauler.advance(step_time * self.ecfg.migration_overlap)
             self.clock += step_time
             self._c_steps.inc()
         if tr.enabled:
@@ -822,7 +1090,7 @@ class InferenceEngine:
 
     # ------------------------------------------------------ simulated timing
     def _model_prefill_time(self, prompt_len: int) -> float:
-        devs = {d.device_id: d for d in self.cluster.devices}
+        devs = self._devs
         t = 0.0
         for did in self.primary_ids:
             cls = devs[did].cls
@@ -840,7 +1108,7 @@ class InferenceEngine:
         r0 = next(iter(self.attn_reqs.values()))
         attn_t = current_attention_time(self.workers, r0.group_ratio,
                                         r0.head_dim, r0.dtype_bytes)
-        devs = {d.device_id: d for d in self.cluster.devices}
+        devs = self._devs
         dense_t = 0.0
         nb = max(1, len(self.running))
         for did in self.primary_ids:
@@ -856,8 +1124,21 @@ class InferenceEngine:
         return attn_t + dense_t
 
     # ------------------------------------------------------------------- run
-    def run_until_drained(self, max_steps: int = 10000) -> None:
+    def run_until_drained(self, max_steps: int = 10000) -> bool:
+        """Step until every request finishes or ``max_steps`` elapse.
+        Returns ``True`` when drained; hitting the step cap with work
+        still queued/running warns and bumps the ``run_undrained``
+        counter instead of exiting silently."""
         for _ in range(max_steps):
             if not self.queue and not self.running and not self.prefilling:
-                break
+                return True
             self.step()
+        if self.queue or self.running or self.prefilling:
+            self._c_undrained.inc()
+            warnings.warn(
+                f"run_until_drained exiting at max_steps={max_steps} with "
+                f"{len(self.queue)} queued / {len(self.running)} running / "
+                f"{len(self.prefilling)} prefilling requests unfinished",
+                RuntimeWarning, stacklevel=2)
+            return False
+        return True

@@ -172,6 +172,35 @@ class PagedHeadCache:
             np.int32)
         return chains[:, page_idx], (t % self.page).astype(np.int32)
 
+    def mixed_scatter_indices(self, rows, C: int
+                              ) -> Tuple[np.ndarray, np.ndarray]:
+        """Write indices for a MIXED row batch (the fused prefill+decode
+        step): ``rows`` is a list of ``(rid, start, n)`` spans — a decode
+        row is the degenerate ``n == 1`` span at ``start == ctx - 1``.
+        Returns ``(B, Hkv, C)`` slot ids and ``(B, C)`` page offsets,
+        sink-padded past each row's ``n`` and past the true batch, so one
+        call builds the whole fused batch's write plan."""
+        Hkv = self.cfg.n_kv_heads
+        B = len(rows)
+        wslots = np.full((B, Hkv, C), self.sink, np.int32)
+        woffs = np.zeros((B, C), np.int32)
+        for i, (rid, start, n) in enumerate(rows):
+            slots, offs = self.request_scatter_indices(rid, start, n)
+            wslots[i, :, :n] = slots
+            woffs[i, :n] = offs
+        return wslots, woffs
+
+    def block_table_matrix(self, rid: int, max_pages: int) -> np.ndarray:
+        """(Hkv, max_pages) int32 slot-id matrix for one request, sink-
+        padded (and truncated) to ``max_pages`` — the row layout the
+        paged kernels' block tables want."""
+        Hkv = self.cfg.n_kv_heads
+        out = np.full((Hkv, max_pages), self.sink, np.int32)
+        for g in range(Hkv):
+            chain = self.block_table(rid, g)[:max_pages]
+            out[g, :len(chain)] = chain
+        return out
+
     def _scatter_indices(self, rid: int, group: int, ctx: int
                          ) -> Tuple[np.ndarray, np.ndarray]:
         """(slot, offset) per token position for one group chain."""

@@ -126,6 +126,29 @@ class Tracer:
             return
         self._record(Span(name, ts, dur, depth, track, args))
 
+    def add_phase_spans(self, prefix: str, ts: float, dur: float,
+                        weights: Dict[str, float], track: str = "main",
+                        depth: int = 0,
+                        args: Optional[Dict[str, Any]] = None) -> None:
+        """Attribute ONE measured span to several phases: split ``[ts,
+        ts + dur)`` into consecutive ``<prefix><phase>`` child spans whose
+        durations are proportional to ``weights`` (zero-weight phases are
+        skipped).  Used by the engine's fused prefill+decode step, where
+        both phases execute inside a single jitted call and only their
+        token shares are known."""
+        if not self.enabled:
+            return
+        total = sum(w for w in weights.values() if w > 0.0)
+        if total <= 0.0:
+            return
+        t = ts
+        for phase, w in weights.items():
+            if w <= 0.0:
+                continue
+            d = dur * w / total
+            self._record(Span(f"{prefix}{phase}", t, d, depth, track, args))
+            t += d
+
     def _record(self, sp: Span) -> None:
         self.events.append(sp)
         self.totals[sp.name] = self.totals.get(sp.name, 0.0) + sp.dur

@@ -43,6 +43,7 @@ def test_bucket_universe_matches_counts():
     assert len(ENG.decode_bucket_shapes()) == ENG.bucket_count() == 4
     assert len(ENG.prefill_bucket_shapes()) == ENG.prefill_bucket_count() \
         == 16
+    assert len(ENG.fused_bucket_shapes()) == ENG.fused_bucket_count() == 16
 
 
 @pytest.mark.parametrize("B,P", ENG.decode_bucket_shapes())
@@ -54,5 +55,14 @@ def test_decode_bucket_lowers(B, P):
 @pytest.mark.parametrize("B,C,P", ENG.prefill_bucket_shapes())
 def test_prefill_bucket_lowers(B, C, P):
     ENG._chunk_fn.lower(PARAMS, POOL, POOL, S32(B, HKV, P), S32(B),
+                        S32(B), S32(B, HKV, C), S32(B, C), S32(B, C),
+                        S32(B))
+
+
+@pytest.mark.parametrize("B,C,P", ENG.fused_bucket_shapes())
+def test_fused_bucket_lowers(B, C, P):
+    # every shape the fused packer can present — including C == 1, the
+    # decode-only degenerate chunk — must lower cleanly
+    ENG._fused_fn.lower(PARAMS, POOL, POOL, S32(B, HKV, P), S32(B),
                         S32(B), S32(B, HKV, C), S32(B, C), S32(B, C),
                         S32(B))

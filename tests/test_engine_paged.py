@@ -19,14 +19,15 @@ KEY = jax.random.PRNGKey(0)
 PARAMS = T.init_params(CFG, KEY)
 
 
-def make_engine(mode="paged", max_seq=96, cache_gb=None, max_batch=8):
+def make_engine(mode="paged", max_seq=96, cache_gb=None, max_batch=8,
+                step_mode="fused"):
     cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
     return InferenceEngine(CFG, PARAMS, cl, primary_ids=[0],
                            pool_ids=[1, 2],
                            engine_cfg=EngineConfig(
                                max_batch=max_batch, max_seq=max_seq,
                                cache_gb_per_device=cache_gb,
-                               decode_mode=mode))
+                               decode_mode=mode, step_mode=step_mode))
 
 
 def ref_decode(prompt, n, max_seq=96):
@@ -159,8 +160,10 @@ def test_paged_exact_with_preemption_interleaved():
 
 def test_recompile_guard_bucketed_shapes():
     """jit compile count stays <= bucket count across a 100-step run with
-    varying batch sizes (the bucketing contract)."""
-    eng = make_engine("paged")
+    varying batch sizes (the bucketing contract).  Pinned to the split
+    schedule — the fused path has its own guard in
+    tests/test_fused_step.py."""
+    eng = make_engine("paged", step_mode="split")
     rng = np.random.default_rng(7)
     rid = 0
     steps = 0

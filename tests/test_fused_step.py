@@ -1,0 +1,282 @@
+"""Fused prefill+decode step: token exactness vs the split schedule,
+single-dispatch per step, bucketed recompile guard, token-budget packing,
+the TPOT-SLO chunk autotuner, and the satellite engine behaviors
+(cached device map, configurable migration overlap, drained flag)."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import EngineConfig, InferenceEngine, Request
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                  head_dim=16, dtype="float32", remat=False,
+                  scan_q_chunk=64, loss_chunk=64)
+KEY = jax.random.PRNGKey(0)
+PARAMS = T.init_params(CFG, KEY)
+
+PAGE = 8
+
+
+def make_engine(step_mode="fused", max_seq=96, chunk=8, max_batch=8,
+                **kw):
+    cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
+    return InferenceEngine(CFG, PARAMS, cl, primary_ids=[0],
+                           pool_ids=[1, 2],
+                           engine_cfg=EngineConfig(
+                               max_batch=max_batch, max_seq=max_seq,
+                               page_size=PAGE, prefill_chunk=chunk,
+                               step_mode=step_mode, **kw))
+
+
+def prompts_of_lengths(lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[int(x) for x in rng.integers(0, CFG.vocab_size, n)]
+            for n in lens]
+
+
+def ref_decode(prompt, n, max_seq=96):
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, cache = T.prefill(CFG, PARAMS, {"tokens": toks},
+                              max_seq=max_seq)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n - 1):
+        l2, cache = T.decode_step(CFG, PARAMS, cache,
+                                  jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(l2[0])))
+    return out
+
+
+def run_both(prompts, max_new=6, **kw):
+    outs = {}
+    for mode in ("fused", "split"):
+        eng = make_engine(step_mode=mode, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=max_new))
+        assert eng.run_until_drained(800)
+        assert len(eng.finished) == len(prompts)
+        eng.kv.check_invariants()
+        outs[mode] = {r.rid: list(r.output) for r in eng.finished}
+    return outs
+
+
+# ------------------------------------------------------------ exactness
+def test_fused_matches_split_odd_lengths():
+    """Prompt lengths crossing every page/chunk boundary: 1, page-1,
+    page, page+1, multi-page — fused == split == plain decode."""
+    lens = [1, PAGE - 1, PAGE, PAGE + 1, 3 * PAGE + 5]
+    prompts = prompts_of_lengths(lens)
+    outs = run_both(prompts)
+    assert outs["fused"] == outs["split"]
+    for i, p in enumerate(prompts):
+        assert outs["fused"][i] == ref_decode(p, 6)
+
+
+def test_fused_interleaves_prefill_with_decode():
+    """A long prompt arriving mid-decode rides the SAME jitted call as
+    the running decode rows — decode keeps producing every step."""
+    eng = make_engine()
+    assert eng.use_fused
+    short = prompts_of_lengths([4, 5], seed=1)
+    eng.submit(Request(rid=0, prompt=short[0], max_new_tokens=12))
+    eng.submit(Request(rid=1, prompt=short[1], max_new_tokens=12))
+    eng.step()
+    eng.step()                  # prompt done step 1, decoding from step 2
+    assert len(eng.running) == 2
+    long_prompt = prompts_of_lengths([33], seed=2)[0]   # 5 chunks
+    eng.submit(Request(rid=2, prompt=long_prompt, max_new_tokens=3,
+                       arrival=eng.clock))
+    calls0 = eng.metrics["model_calls"]
+    steps0 = eng.metrics["steps"]
+    for _ in range(4):
+        before = [len(r.output) for r in eng.running if r.rid != 2]
+        eng.step()
+        after = [len(r.output) for r in eng.running if r.rid != 2]
+        assert any(a > b for a, b in zip(after, before))
+    # mixed prefill+decode iterations still issued ONE model call each
+    assert eng.metrics["model_calls"] - calls0 == eng.metrics["steps"] - steps0
+    assert any(r.rid == 2 for r in eng.prefilling + eng.running)
+    assert eng.run_until_drained(400)
+    for r in eng.finished:
+        assert r.output == ref_decode(r.prompt, r.max_new_tokens)
+
+
+def test_fused_exact_after_preemption_replay():
+    """Preempted requests resume via chunked REPLAY prefill inside the
+    fused batch — exactness survives the round trip."""
+    eng = make_engine()
+    prompts = prompts_of_lengths([11, 17, 9, 14], seed=4)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=10))
+    for _ in range(4):
+        eng.step()
+    victims = [r for r in eng.running if r.output][:2]
+    assert victims
+    for r in victims:
+        eng._preempt(r)
+        assert r.prefill_pos == 0
+    eng.kv.check_invariants()
+    assert eng.run_until_drained(800)
+    assert len(eng.finished) == 4
+    assert eng.metrics["evictions"] >= 2
+    for r in eng.finished:
+        assert r.output == ref_decode(r.prompt, r.max_new_tokens)
+
+
+# ----------------------------------------------------- dispatch + compiles
+def test_fused_single_dispatch_per_step():
+    """Fused mode issues exactly ONE jitted model call per engine step;
+    split issues up to two (prefill chunk + decode)."""
+    prompts = prompts_of_lengths([13, 5, 21, 9], seed=6)
+    eng = make_engine(step_mode="fused")
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+    assert eng.run_until_drained(400)
+    assert eng.metrics["model_calls"] == eng.metrics["steps"]
+    assert eng.metrics["fused_steps"] == eng.metrics["steps"]
+
+    eng2 = make_engine(step_mode="split")
+    for i, p in enumerate(prompts):
+        eng2.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+    assert eng2.run_until_drained(400)
+    assert eng2.metrics["model_calls"] > eng2.metrics["steps"]
+    assert eng2.metrics["fused_steps"] == 0
+
+
+def test_fused_recompile_guard_bucketed_shapes():
+    """>= 40 varied-length requests through the fused scheduler: total
+    compiles stay within fused_bucket_count() (the bucketing contract)."""
+    eng = make_engine(chunk=8, max_seq=64)
+    rng = np.random.default_rng(11)
+    n_req = 40
+    for i in range(n_req):
+        eng.submit(Request(
+            rid=i,
+            prompt=[int(x) for x in rng.integers(0, CFG.vocab_size,
+                                                 rng.integers(1, 25))],
+            max_new_tokens=int(rng.integers(1, 5))))
+    assert eng.run_until_drained(800)
+    assert len(eng.finished) == n_req
+    assert eng.fused_compile_count() <= eng.fused_bucket_count(), \
+        (eng.fused_compile_count(), eng.fused_bucket_count())
+    # bucketing really was exercised by multiple distinct shapes
+    assert len(eng._fused_shapes) >= 2
+    # every realized shape is in the enumerated universe
+    assert set(eng._fused_shapes) <= set(eng.fused_bucket_shapes())
+
+
+def test_fused_falls_back_without_paged_paths():
+    eng = make_engine(prefill_mode="dense")
+    assert not eng.use_fused            # dense prefill -> split schedule
+    p = prompts_of_lengths([7], seed=9)[0]
+    eng.submit(Request(rid=0, prompt=p, max_new_tokens=4))
+    assert eng.run_until_drained(200)
+    assert eng.finished[0].output == ref_decode(p, 4)
+    assert eng.metrics["fused_steps"] == 0
+
+
+# ------------------------------------------------------- budget + autotune
+def test_token_budget_packs_decode_first():
+    """With a tiny budget, decode rows are always admitted and prefill
+    tokens only fill what remains — long prompts trickle in but nothing
+    deadlocks."""
+    eng = make_engine(token_budget=3)
+    short = prompts_of_lengths([2], seed=1)[0]
+    eng.submit(Request(rid=0, prompt=short, max_new_tokens=8))
+    eng.step()                          # 2-token prompt fits budget 3
+    eng.step()
+    assert [r.rid for r in eng.running] == [0]
+    long_prompt = prompts_of_lengths([19], seed=2)[0]
+    eng.submit(Request(rid=1, prompt=long_prompt, max_new_tokens=2,
+                       arrival=eng.clock))
+    eng.step()
+    # 1 decode token + at most (3 - 1) prefill tokens this step
+    assert next(r for r in eng.prefilling).prefill_pos <= 2
+    assert eng.run_until_drained(400)
+    assert len(eng.finished) == 2
+    for r in eng.finished:
+        assert r.output == ref_decode(r.prompt, r.max_new_tokens)
+
+
+def test_autotuner_shrinks_on_overrun_grows_on_headroom():
+    """Unit-drive the controller: latencies over the SLO halve chunk_now
+    down to 1; sustained <0.5x SLO doubles it back to prefill_chunk."""
+    eng = make_engine(chunk=16, tpot_slo_s=1.0)
+    assert eng._chunk_now == 16
+    for _ in range(16):
+        eng._autotune_chunk(10.0)       # gross overrun
+    assert eng._chunk_now == 1          # pow2-clamped at the floor
+    assert eng.registry.counter("tpot_slo_violations").value >= 16
+    for _ in range(64):
+        eng._autotune_chunk(0.01)       # huge headroom
+    assert eng._chunk_now == 16         # clamped at prefill_chunk
+    assert eng.snapshot()["fused_warm_step_s/count"] == 80
+    assert eng.snapshot()["prefill/chunk_now"] == 16.0
+
+
+def test_autotuned_run_stays_exact_and_in_universe():
+    """An end-to-end run with the autotuner live (absurdly tight SLO so
+    it actually moves chunk_now) stays token-exact and inside the fused
+    bucket universe."""
+    eng = make_engine(chunk=16, tpot_slo_s=1e-9)
+    prompts = prompts_of_lengths([25, 9, 33, 5], seed=13)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    assert eng.run_until_drained(800)
+    # only warm (recompile-free) steps feed the controller, so a short
+    # run shrinks the chunk at least once rather than all the way down
+    assert eng._chunk_now < 16
+    assert eng.registry.counter("tpot_slo_violations").value > 0
+    assert set(eng._fused_shapes) <= set(eng.fused_bucket_shapes())
+    for r in eng.finished:
+        assert r.output == ref_decode(r.prompt, r.max_new_tokens)
+
+
+# ------------------------------------------------------------- satellites
+def test_device_map_cached_and_invalidated_on_cluster_change():
+    eng = make_engine()
+    first = eng._devs
+    eng._model_prefill_time(8)
+    eng._model_decode_parts()
+    assert eng._devs is first           # no per-call rebuild
+    cl2 = ClusterSpec.build([("A100", 2)])
+    eng.cluster = cl2
+    assert eng._devs is not first
+    assert set(eng._devs) == {d.device_id for d in cl2.devices}
+
+
+def test_migration_overlap_config_drives_hauler_window():
+    windows = []
+    eng = make_engine(migration_overlap=0.25)
+    orig = eng.hauler.advance
+    eng.hauler.advance = lambda dt: (windows.append(dt), orig(dt))
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    eng.step()
+    step_time = eng._model_decode_time()
+    assert windows and windows[-1] == pytest.approx(step_time * 0.25)
+
+
+def test_run_until_drained_flag_and_counter():
+    eng = make_engine()
+    p = prompts_of_lengths([6], seed=3)[0]
+    eng.submit(Request(rid=0, prompt=p, max_new_tokens=20))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert eng.run_until_drained(400) is True
+    # a drained exit must not warn
+    assert not [x for x in w if "run_until_drained" in str(x.message)]
+    assert eng.metrics["steps"] > 0
+    assert eng.registry.counter("run_undrained").value == 0
+
+    eng2 = make_engine()
+    eng2.submit(Request(rid=0, prompt=p, max_new_tokens=50))
+    with pytest.warns(RuntimeWarning, match="max_steps=3"):
+        assert eng2.run_until_drained(3) is False
+    assert eng2.registry.counter("run_undrained").value == 1

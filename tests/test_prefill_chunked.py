@@ -24,7 +24,7 @@ PAGE = 8
 
 
 def make_engine(prefill_mode="paged", decode_mode="paged", max_seq=96,
-                chunk=8, max_batch=8):
+                chunk=8, max_batch=8, step_mode="fused"):
     cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
     return InferenceEngine(CFG, PARAMS, cl, primary_ids=[0],
                            pool_ids=[1, 2],
@@ -32,7 +32,8 @@ def make_engine(prefill_mode="paged", decode_mode="paged", max_seq=96,
                                max_batch=max_batch, max_seq=max_seq,
                                page_size=PAGE, decode_mode=decode_mode,
                                prefill_mode=prefill_mode,
-                               prefill_chunk=chunk))
+                               prefill_chunk=chunk,
+                               step_mode=step_mode))
 
 
 def ref_decode(prompt, n, max_seq=96):
@@ -173,8 +174,10 @@ def test_chunked_prefill_resume_after_preemption():
 
 def test_prefill_recompile_guard_bucketed_shapes():
     """>= 50 varied-length requests: total chunked-prefill compiles stay
-    within prefill_bucket_count() (the bucketing contract)."""
-    eng = make_engine(chunk=8, max_seq=64)
+    within prefill_bucket_count() (the bucketing contract).  Pinned to
+    the split schedule — the fused path has its own guard in
+    tests/test_fused_step.py."""
+    eng = make_engine(chunk=8, max_seq=64, step_mode="split")
     rng = np.random.default_rng(11)
     n_req = 50
     for i in range(n_req):

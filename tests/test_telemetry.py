@@ -177,11 +177,14 @@ def test_validator_rejects_malformed_traces():
 def test_engine_trace_has_nested_module_spans(traced_engine):
     tr = traced_engine.tracer
     names = {s.name for s in tr.spans()}
-    assert {"step", "admit", "prefill_chunk", "paged_decode",
-            "attention", "mlp"} <= names
+    assert {"step", "admit", "fused_step", "fused/decode",
+            "fused/prefill", "attention", "mlp"} <= names
     assert all(s.depth == 0 for s in tr.spans("step"))
-    assert all(s.depth == 1 for s in tr.spans("paged_decode"))
-    # module spans nest below the decode/prefill span they ran in
+    assert all(s.depth == 1 for s in tr.spans("fused_step"))
+    # the per-phase attribution splits each fused call's window
+    for phase in ("fused/decode", "fused/prefill"):
+        assert all(s.depth >= 2 for s in tr.spans(phase))
+    # module spans nest below the fused span they ran in
     assert all(s.depth >= 2 for s in tr.spans("attention", track="main"))
     # attention spans carry the (h, g) annotation the profiler fit reads
     assert all("heads" in s.args for s in tr.spans("attention"))
@@ -254,7 +257,10 @@ def test_recompile_counter_bounded_by_buckets():
                 rid += 1
         eng.step()
     rec = eng.registry.counter("jit/recompiles").value
-    assert 0 < rec <= eng.bucket_count() + eng.prefill_bucket_count()
+    # the fused default dispatches ONE jitted fn, so its bucket universe
+    # is the whole recompile bound
+    assert 0 < rec <= eng.fused_bucket_count()
+    assert eng.fused_compile_count() <= eng.fused_bucket_count()
     assert eng.decode_compile_count() <= eng.bucket_count()
     assert eng.prefill_compile_count() <= eng.prefill_bucket_count()
 
