@@ -52,6 +52,60 @@ def main() -> None:
     # primary carries more heads than pool devices (paper's observation)
     last = res.timeline[-1] if res.timeline else {}
     emit("fig14/served", 0.0, f"n={len(res.served)}")
+    live_usage_section()
+
+
+def live_usage_section() -> None:
+    """Live-engine counterpart: per-device pool occupancy over a bursty
+    run with a forced mid-run re-dispatch, read from the
+    ``kv/device/<id>/used_slots`` gauges and the ``migrate/d2d_bytes``
+    counter (physical cross-shard migration traffic)."""
+    import jax
+
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.serving import EngineConfig, InferenceEngine, Request
+
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                      head_dim=16, dtype="float32", remat=False,
+                      scan_q_chunk=64, loss_chunk=64)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cl = ClusterSpec.build([("A100", 1), ("3090", 2)])
+    eng = InferenceEngine(cfg, params, cl, primary_ids=[0],
+                          pool_ids=[1, 2],
+                          engine_cfg=EngineConfig(max_batch=6, max_seq=64))
+    rng = np.random.default_rng(14)
+    samples: dict[int, list[float]] = {d: [] for d in eng.kv.partitions}
+    rid, migrated = 0, False
+    for step in range(100):
+        # bursty arrivals: a light phase, then a burst, then drain
+        if rid < 10 and (step % 8 == 0 or (20 <= step < 30)):
+            eng.submit(Request(
+                rid=rid,
+                prompt=[int(x) for x in rng.integers(0, 128,
+                                                     rng.integers(5, 12))],
+                max_new_tokens=8))
+            rid += 1
+        if not (eng.running or eng.prefilling or eng.queue):
+            break
+        eng.step()
+        # one forced re-dispatch mid-run so the migration path is real
+        if not migrated and step > 25 and eng.running:
+            eng._apply_migration(eng.running[0].rid, {1: cfg.n_heads})
+            migrated = True
+        snap = eng.snapshot("kv/device/")
+        for d in samples:
+            samples[d].append(snap[f"kv/device/{d}/used_slots"])
+    for d in sorted(samples):
+        s = np.asarray(samples[d]) if samples[d] else np.zeros(1)
+        emit(f"fig14/live/device{d}/used_slots", 0.0,
+             f"mean={s.mean():.1f} peak={s.max():.0f}")
+    snap = eng.snapshot()
+    emit("fig14/live/migrate_d2d_bytes", 0.0,
+         f"bytes={snap['migrate/d2d_bytes']:.0f} "
+         f"partial={snap['migrate/partial']:.0f} "
+         f"gather={snap['fastpath/gather_d2d_bytes']:.0f}")
 
 
 if __name__ == "__main__":

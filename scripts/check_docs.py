@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Docs lint (run by CI): keep docs/*.md honest against the tree.
+
+Checks every markdown file under docs/:
+
+  * backticked repo paths (``src/repro/...py``, ``scripts/...sh``,
+    directories ending in ``/``) exist on disk;
+  * ``python -m <module>`` invocations resolve to a module under
+    ``src/`` or the repo root (and ``python <file>.py`` files exist);
+  * every ``--flag`` on such an invocation line appears in the target
+    module's source (argparse drift guard);
+  * relative markdown links resolve.
+
+Exit 0 when clean, 1 with one line per problem otherwise.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ROOT / "docs"
+
+PATH_RE = re.compile(r"`([A-Za-z0-9_][A-Za-z0-9_./-]*"
+                     r"(?:\.(?:py|md|sh|yml|yaml|json|txt)|/))`")
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+PYMOD_RE = re.compile(r"python(?:3)? -m ([A-Za-z0-9_.]+)")
+PYFILE_RE = re.compile(r"python(?:3)? ((?:[A-Za-z0-9_./-]+/)?"
+                       r"[A-Za-z0-9_-]+\.py)")
+FLAG_RE = re.compile(r"(--[A-Za-z0-9][A-Za-z0-9-]*)")
+
+
+def module_file(mod: str) -> Path | None:
+    rel = Path(*mod.split("."))
+    for base in (ROOT / "src", ROOT):
+        for cand in (base / rel.with_suffix(".py"),
+                     base / rel / "__init__.py"):
+            if cand.exists():
+                return cand
+    return None
+
+
+def check_doc(doc: Path, errors: list[str]) -> None:
+    text = doc.read_text()
+    rel = doc.relative_to(ROOT)
+
+    for m in PATH_RE.finditer(text):
+        p = m.group(1)
+        if "/" not in p:
+            continue            # bare filenames may be outputs (trace.json)
+        if not (ROOT / p).exists():
+            errors.append(f"{rel}: referenced path does not exist: {p}")
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        tpath = (doc.parent / target.split("#", 1)[0]).resolve()
+        if not tpath.exists():
+            errors.append(f"{rel}: broken markdown link: {target}")
+
+    for line in text.splitlines():
+        mods = [(mm.group(1), module_file(mm.group(1)))
+                for mm in PYMOD_RE.finditer(line)]
+        for mod, mfile in mods:
+            if mfile is None:
+                errors.append(f"{rel}: python -m target not found: {mod}")
+        for mm in PYFILE_RE.finditer(line):
+            if not (ROOT / mm.group(1)).exists():
+                errors.append(f"{rel}: python script not found: "
+                              f"{mm.group(1)}")
+        srcs = [mf.read_text() for _, mf in mods if mf is not None]
+        if srcs:
+            for flag in FLAG_RE.findall(line):
+                if not any(flag in s for s in srcs):
+                    errors.append(f"{rel}: flag {flag} not found in "
+                                  f"{', '.join(mod for mod, _ in mods)}")
+
+
+def main() -> int:
+    docs = sorted(DOCS.glob("*.md"))
+    if not docs:
+        print("check_docs: no docs/*.md found", file=sys.stderr)
+        return 1
+    errors: list[str] = []
+    for doc in docs:
+        check_doc(doc, errors)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: {len(docs)} doc(s) clean")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,9 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+echo "== docs lint =="
+python scripts/check_docs.py
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,6 +55,12 @@ class WorkerState:
     # re-dispatch decisions follow *measured* latency, not just the static
     # profile.  1.0 = trust the analytic model.
     calib: float = 1.0
+    # physical free-bytes probe of this device's KV pool shard (the engine
+    # wires it to its PagedHeadCache partition); when set, Eq 6 capacity
+    # decisions clamp the byte accounting to REAL per-partition free space
+    # — page-granular allocation can exhaust a pool before the token-level
+    # bookkeeping does.  None = accounting only (standalone dispatcher).
+    free_bytes_fn: Optional[Callable[[], float]] = None
 
     def eff_a(self, group_ratio: int, head_dim: int, dtype_bytes: int) -> float:
         """Per-head slope including the per-head transfer volume (Eq 4)."""
@@ -82,7 +88,10 @@ class WorkerState:
                 + self.const())
 
     def free_bytes(self) -> float:
-        return max(0.0, self.capacity_bytes - self.cache_bytes)
+        acct = max(0.0, self.capacity_bytes - self.cache_bytes)
+        if self.free_bytes_fn is None:
+            return acct
+        return min(acct, max(0.0, float(self.free_bytes_fn())))
 
 
 @dataclasses.dataclass
@@ -329,7 +338,10 @@ def ideal_attention_time(workers: Sequence[WorkerState],
         return 0.0
     # Continuous relaxation: distribute total heads & bytes to equalize f_i.
     # Solve via the same LP with all requests and zeroed current load.
-    blank = [dataclasses.replace(w, heads=0.0, cache_bytes=0.0) for w in ws]
+    # hypothetical zero-load copies: drop the physical-pool probe too —
+    # the ideal bound assumes the pool would be re-packed from scratch
+    blank = [dataclasses.replace(w, heads=0.0, cache_bytes=0.0,
+                                 free_bytes_fn=None) for w in ws]
     x = _solve_relaxation(blank, list(requests)) if HAVE_SCIPY else None
     if x is None:
         x = _greedy_relaxation(blank, list(requests))

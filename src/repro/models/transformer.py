@@ -747,6 +747,192 @@ def paged_prefill_chunk_traced(cfg: ModelConfig, params: Params,
                                        last_idx, tracer, span_args)
 
 
+def _pool_exchange_in(kpools, vpools, anchor: int, anchor_sink: int,
+                      g_dev: jax.Array, g_src: jax.Array, g_dst: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Gather remote pages into the anchor pool's staging region.
+
+    The paged Pallas kernels consume ONE pool pair, so batch rows whose
+    pages live in another device's pool shard are served by copying those
+    pages into the anchor's staging slots first — inside the same jitted
+    step.  ``g_dev/g_src/g_dst`` are pow2-bucket-padded lane arrays
+    (``PoolStepPlan.exchange_arrays``); the loop over pool keys is a
+    static Python loop (the pool dict is part of the trace), and each
+    device contributes one masked gather+scatter: lanes belonging to
+    other devices degrade to sink-to-sink copies via ``jnp.where`` (the
+    remote sink read, the anchor sink written — both garbage by
+    construction, never read through a length mask).  Zero-lane arrays
+    (the single-device common case) skip the copies entirely.
+    Returns the updated anchor (kpool, vpool)."""
+    ak, av = kpools[anchor], vpools[anchor]
+    if g_dev.shape[0] == 0:
+        return ak, av
+    for dev in sorted(d for d in kpools if d != anchor):
+        kp, vp = kpools[dev], vpools[dev]
+        rsink = kp.shape[1] - 1
+        m = g_dev == dev
+        src = jnp.where(m, g_src, rsink)
+        dst = jnp.where(m, g_dst, anchor_sink)
+        ak = ak.at[:, dst].set(kp[:, src])
+        av = av.at[:, dst].set(vp[:, src])
+    return ak, av
+
+
+def _pool_exchange_out(kpools, vpools, anchor: int, anchor_sink: int,
+                      w_dev: jax.Array, w_src: jax.Array, w_dst: jax.Array):
+    """Write dirty staged pages back to their owning pool shards — the
+    inverse of ``_pool_exchange_in``, applied after the forward pass has
+    scattered new K/V into the staging copies.  Masked lanes write the
+    remote pool's own sink from the anchor's sink.  Returns updated
+    (kpools, vpools) dicts."""
+    kpools = dict(kpools)
+    vpools = dict(vpools)
+    if w_dev.shape[0] == 0:
+        return kpools, vpools
+    ak, av = kpools[anchor], vpools[anchor]
+    for dev in sorted(d for d in kpools if d != anchor):
+        kp, vp = kpools[dev], vpools[dev]
+        rsink = kp.shape[1] - 1
+        m = w_dev == dev
+        src = jnp.where(m, w_src, anchor_sink)
+        dst = jnp.where(m, w_dst, rsink)
+        kpools[dev] = kp.at[:, dst].set(ak[:, src])
+        vpools[dev] = vp.at[:, dst].set(av[:, src])
+    return kpools, vpools
+
+
+def sharded_decode_step(cfg: ModelConfig, params: Params,
+                        kpools, vpools, anchor: int, anchor_sink: int,
+                        g_dev: jax.Array, g_src: jax.Array,
+                        g_dst: jax.Array, w_dev: jax.Array,
+                        w_src: jax.Array, w_dst: jax.Array,
+                        block_tables: jax.Array, lengths: jax.Array,
+                        write_slot: jax.Array, write_off: jax.Array,
+                        tokens: jax.Array, pos: jax.Array):
+    """``paged_decode_step`` over per-device pool shards.
+
+    Block tables / write slots are ANCHOR-pool indices built by
+    ``PoolStepPlan``; remote pages are staged in by ``_pool_exchange_in``,
+    the single-pool decode step runs against the anchor pool, and dirty
+    staged pages (the decode-token write page of remote rows) are written
+    back — all inside one jit.  ``anchor``/``anchor_sink`` are static.
+    Returns (logits, kpools, vpools) with the pool dicts as pytrees."""
+    kpools = dict(kpools)
+    vpools = dict(vpools)
+    ak, av = _pool_exchange_in(kpools, vpools, anchor, anchor_sink,
+                               g_dev, g_src, g_dst)
+    logits, ak, av = paged_decode_step(cfg, params, ak, av, block_tables,
+                                       lengths, write_slot, write_off,
+                                       tokens, pos)
+    kpools[anchor], vpools[anchor] = ak, av
+    kpools, vpools = _pool_exchange_out(kpools, vpools, anchor,
+                                        anchor_sink, w_dev, w_src, w_dst)
+    return logits, kpools, vpools
+
+
+def sharded_decode_step_traced(cfg: ModelConfig, params: Params,
+                               kpools, vpools, anchor: int,
+                               anchor_sink: int, g_dev, g_src, g_dst,
+                               w_dev, w_src, w_dst, block_tables, lengths,
+                               write_slot, write_off, tokens, pos,
+                               tracer, span_args=None):
+    """Instrumented twin of ``sharded_decode_step`` (eager exchange around
+    the traced single-pool body)."""
+    kpools = dict(kpools)
+    vpools = dict(vpools)
+    ak, av = _pool_exchange_in(kpools, vpools, anchor, anchor_sink,
+                               g_dev, g_src, g_dst)
+    logits, ak, av = paged_decode_step_traced(
+        cfg, params, ak, av, block_tables, lengths, write_slot, write_off,
+        tokens, pos, tracer, span_args)
+    kpools[anchor], vpools[anchor] = ak, av
+    kpools, vpools = _pool_exchange_out(kpools, vpools, anchor,
+                                        anchor_sink, w_dev, w_src, w_dst)
+    return logits, kpools, vpools
+
+
+def sharded_prefill_chunk(cfg: ModelConfig, params: Params,
+                          kpools, vpools, anchor: int, anchor_sink: int,
+                          g_dev, g_src, g_dst, w_dev, w_src, w_dst,
+                          block_tables, lengths, starts, write_slots,
+                          write_offs, tokens, last_idx):
+    """``paged_prefill_chunk`` over per-device pool shards: stage remote
+    pages in, run the single-pool chunk forward on the anchor pool, write
+    dirty staged pages back — one jit (see ``sharded_decode_step``)."""
+    kpools = dict(kpools)
+    vpools = dict(vpools)
+    ak, av = _pool_exchange_in(kpools, vpools, anchor, anchor_sink,
+                               g_dev, g_src, g_dst)
+    logits, ak, av = paged_prefill_chunk(cfg, params, ak, av, block_tables,
+                                         lengths, starts, write_slots,
+                                         write_offs, tokens, last_idx)
+    kpools[anchor], vpools[anchor] = ak, av
+    kpools, vpools = _pool_exchange_out(kpools, vpools, anchor,
+                                        anchor_sink, w_dev, w_src, w_dst)
+    return logits, kpools, vpools
+
+
+def sharded_prefill_chunk_traced(cfg: ModelConfig, params: Params,
+                                 kpools, vpools, anchor: int,
+                                 anchor_sink: int, g_dev, g_src, g_dst,
+                                 w_dev, w_src, w_dst, block_tables,
+                                 lengths, starts, write_slots, write_offs,
+                                 tokens, last_idx, tracer, span_args=None):
+    """Instrumented twin of ``sharded_prefill_chunk``."""
+    kpools = dict(kpools)
+    vpools = dict(vpools)
+    ak, av = _pool_exchange_in(kpools, vpools, anchor, anchor_sink,
+                               g_dev, g_src, g_dst)
+    logits, ak, av = paged_prefill_chunk_traced(
+        cfg, params, ak, av, block_tables, lengths, starts, write_slots,
+        write_offs, tokens, last_idx, tracer, span_args)
+    kpools[anchor], vpools[anchor] = ak, av
+    kpools, vpools = _pool_exchange_out(kpools, vpools, anchor,
+                                        anchor_sink, w_dev, w_src, w_dst)
+    return logits, kpools, vpools
+
+
+def sharded_fused_step(cfg: ModelConfig, params: Params,
+                       kpools, vpools, anchor: int, anchor_sink: int,
+                       g_dev, g_src, g_dst, w_dev, w_src, w_dst,
+                       block_tables, lengths, starts, write_slots,
+                       write_offs, tokens, last_idx):
+    """``paged_fused_step`` over per-device pool shards (mixed decode +
+    prefill rows; see ``sharded_decode_step`` for the exchange scheme)."""
+    assert supports_fused_step(cfg), "config not supported by fused step"
+    kpools = dict(kpools)
+    vpools = dict(vpools)
+    ak, av = _pool_exchange_in(kpools, vpools, anchor, anchor_sink,
+                               g_dev, g_src, g_dst)
+    logits, ak, av = paged_fused_step(cfg, params, ak, av, block_tables,
+                                      lengths, starts, write_slots,
+                                      write_offs, tokens, last_idx)
+    kpools[anchor], vpools[anchor] = ak, av
+    kpools, vpools = _pool_exchange_out(kpools, vpools, anchor,
+                                        anchor_sink, w_dev, w_src, w_dst)
+    return logits, kpools, vpools
+
+
+def sharded_fused_step_traced(cfg: ModelConfig, params: Params,
+                              kpools, vpools, anchor: int,
+                              anchor_sink: int, g_dev, g_src, g_dst,
+                              w_dev, w_src, w_dst, block_tables, lengths,
+                              starts, write_slots, write_offs, tokens,
+                              last_idx, tracer, span_args=None):
+    """Instrumented twin of ``sharded_fused_step``."""
+    kpools = dict(kpools)
+    vpools = dict(vpools)
+    ak, av = _pool_exchange_in(kpools, vpools, anchor, anchor_sink,
+                               g_dev, g_src, g_dst)
+    logits, ak, av = paged_fused_step_traced(
+        cfg, params, ak, av, block_tables, lengths, starts, write_slots,
+        write_offs, tokens, last_idx, tracer, span_args)
+    kpools[anchor], vpools[anchor] = ak, av
+    kpools, vpools = _pool_exchange_out(kpools, vpools, anchor,
+                                        anchor_sink, w_dev, w_src, w_dst)
+    return logits, kpools, vpools
+
+
 def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
                 tokens: jax.Array) -> Tuple[jax.Array, Cache]:
     """One decode step for all sequences.  tokens: (B, 1) int32.

@@ -118,8 +118,8 @@ from repro.core.dispatcher import (ATTN_SNAPSHOT_PREFIX, AttnRequest,
                                    current_attention_time, dispatch_lp,
                                    grow_context, handle_memory_exhaustion,
                                    maybe_rebalance, release_request)
-from repro.core.hauler import MigrationScheduler, migration_bytes, \
-    plan_migration
+from repro.core.hauler import MigrationScheduler, MigrationTask, \
+    migration_bytes, plan_migration
 from repro.core.profiler import (analytic_attention_model,
                                  analytic_transfer_model)
 from repro.models import transformer as T
@@ -146,6 +146,12 @@ def _pow2s(n: int) -> List[int]:
         b *= 2
     out.append(b)
     return out
+
+
+def _bucket0(n: int) -> int:
+    """_bucket with a 0 bucket: the staging-exchange lane axis is usually
+    empty (single-device rows), and 0 lanes must not round up to 1."""
+    return 0 if n == 0 else _bucket(n)
 
 
 @dataclasses.dataclass
@@ -234,10 +240,23 @@ class InferenceEngine:
             self.device_slots[did] = min(by_mem, pool_cap)
         self.primary_ids = list(primary_ids)
 
+        # Per-device pool shards, anchored on the first primary.  The
+        # anchor's staging region must hold every remote page one step can
+        # reference: <= max_batch rows x n_kv_heads chains x pages_per_seq
+        # pages == pool_cap (single-partition engines need no staging).
+        stage = pool_cap if len(self.device_slots) > 1 else 0
         self.kv = PagedHeadCache(cfg, self.device_slots,
-                                 page_size=engine_cfg.page_size)
-        self._kv_itemsize = int(self.kv.kpool.dtype.itemsize)
+                                 page_size=engine_cfg.page_size,
+                                 anchor=self.primary_ids[0],
+                                 stage_slots=stage)
+        self._kv_itemsize = int(self.kv.dtype.itemsize)
         self.hauler = MigrationScheduler({})
+        # Eq 6 reads REAL per-partition free bytes: clamp each worker's
+        # accounting capacity to its pool shard's physical free space.
+        for w in self.workers:
+            part = self.kv.partitions[w.device_id]
+            w.free_bytes_fn = (lambda p=part, kv=self.kv:
+                               float(p.free * kv.bytes_per_slot()))
 
         self.queue: Deque[Request] = collections.deque()
         self.running: List[Request] = []
@@ -255,6 +274,12 @@ class InferenceEngine:
                                and engine_cfg.trace_modules)
         reg = self.registry
         self._c_migr = reg.counter("migrated_bytes")
+        # device-to-device traffic of the sharded pools: re-dispatch
+        # migrations (cross-pool page copies, budgeted by the hauler) and
+        # the fast paths' staging gathers/writebacks for multi-device rows
+        self._c_d2d = reg.counter("migrate/d2d_bytes")
+        self._c_migr_partial = reg.counter("migrate/partial")
+        self._c_gather_d2d = reg.counter("fastpath/gather_d2d_bytes")
         self._c_evict = reg.counter("evictions")
         self._c_redisp = reg.counter("redispatches")
         self._c_steps = reg.counter("steps")
@@ -319,25 +344,36 @@ class InferenceEngine:
         self._prefill_fn = count_recompiles(jax.jit(
             lambda p, b: T.prefill(cfg, p, b, max_seq=engine_cfg.max_seq)),
             self._c_recompiles)
-        # buffer donation lets XLA update the pools in place; CPU does not
-        # support donation (harmless, but noisy), so only donate off-CPU.
+        # buffer donation lets XLA update the pool-shard pytrees in place;
+        # CPU does not support donation (harmless, but noisy), so only
+        # donate off-CPU.
         donate = (1, 2) if jax.default_backend() != "cpu" else ()
+        # anchor / anchor-sink are static (baked into the trace); the
+        # exchange lane arrays (gd/gs/gt gathers, wd/ws_/wt writebacks)
+        # stage remote pool shards' pages through the anchor inside the
+        # same jitted call (see transformer.sharded_decode_step).
+        anchor, asink = self.kv.anchor, self.kv.sink
         self._paged_fn = count_recompiles(jax.jit(
-            lambda p, kp, vp, bt, ln, ws, wo, t, pos: T.paged_decode_step(
-                cfg, p, kp, vp, bt, ln, ws, wo, t, pos),
+            lambda p, kp, vp, gd, gs, gt, wd, ws_, wt, bt, ln, ws, wo, t,
+            pos: T.sharded_decode_step(
+                cfg, p, kp, vp, anchor, asink, gd, gs, gt, wd, ws_, wt,
+                bt, ln, ws, wo, t, pos),
             donate_argnums=donate), self._c_recompiles)
         self._chunk_fn = count_recompiles(jax.jit(
-            lambda p, kp, vp, bt, ln, st, ws, wo, t, li:
-            T.paged_prefill_chunk(cfg, p, kp, vp, bt, ln, st, ws, wo, t,
-                                  li),
+            lambda p, kp, vp, gd, gs, gt, wd, wsb, wt, bt, ln, st, ws, wo,
+            t, li: T.sharded_prefill_chunk(
+                cfg, p, kp, vp, anchor, asink, gd, gs, gt, wd, wsb, wt,
+                bt, ln, st, ws, wo, t, li),
             donate_argnums=donate), self._c_recompiles)
         self._fused_fn = count_recompiles(jax.jit(
-            lambda p, kp, vp, bt, ln, st, ws, wo, t, li:
-            T.paged_fused_step(cfg, p, kp, vp, bt, ln, st, ws, wo, t, li),
+            lambda p, kp, vp, gd, gs, gt, wd, wsb, wt, bt, ln, st, ws, wo,
+            t, li: T.sharded_fused_step(
+                cfg, p, kp, vp, anchor, asink, gd, gs, gt, wd, wsb, wt,
+                bt, ln, st, ws, wo, t, li),
             donate_argnums=donate), self._c_recompiles)
-        self._decode_shapes: Set[Tuple[int, int]] = set()
-        self._prefill_shapes: Set[Tuple[int, int, int]] = set()
-        self._fused_shapes: Set[Tuple[int, int, int]] = set()
+        self._decode_shapes: Set[Tuple[int, int, int]] = set()
+        self._prefill_shapes: Set[Tuple[int, int, int, int]] = set()
+        self._fused_shapes: Set[Tuple[int, int, int, int]] = set()
         # fused mode needs BOTH paged paths (decode rows and prefill rows
         # share the chunked-prefill kernel); otherwise fall back to split
         self.use_fused = (engine_cfg.step_mode == "fused"
@@ -442,28 +478,42 @@ class InferenceEngine:
     def _max_pages(self) -> int:
         return -(-self.ecfg.max_seq // self.ecfg.page_size)
 
-    def decode_bucket_shapes(self) -> List[Tuple[int, int]]:
-        """Every (batch-bucket, pages-bucket) shape the paged decode step
-        can be jitted at — the full compile universe."""
-        return [(b, p) for b in _pow2s(self.ecfg.max_batch)
-                for p in _pow2s(self._max_pages())]
+    def _gw_pow2s(self) -> List[int]:
+        """Bucket values of the staging-exchange lane axis: 0 (no remote
+        pages this step — the single-device common case) plus pow2s up to
+        the staging capacity.  Single-partition engines have no remote
+        pages at all, so the axis collapses to {0}."""
+        if self.kv.stage == 0:
+            return [0]
+        return [0] + _pow2s(self.kv.stage)
 
-    def prefill_bucket_shapes(self) -> List[Tuple[int, int, int]]:
-        """Every (batch-bucket, chunk-bucket, pages-bucket) shape the
-        chunked prefill step can be jitted at."""
-        return [(b, c, p) for b in _pow2s(self.ecfg.max_batch)
-                for c in _pow2s(self.ecfg.prefill_chunk)
-                for p in _pow2s(self._max_pages())]
+    def decode_bucket_shapes(self) -> List[Tuple[int, int, int]]:
+        """Every (batch-bucket, pages-bucket, exchange-bucket) shape the
+        paged decode step can be jitted at — the full compile universe."""
+        return [(b, p, g) for b in _pow2s(self.ecfg.max_batch)
+                for p in _pow2s(self._max_pages())
+                for g in self._gw_pow2s()]
 
-    def fused_bucket_shapes(self) -> List[Tuple[int, int, int]]:
-        """Every (batch-bucket, chunk-bucket, pages-bucket) shape the
-        fused step can be jitted at.  The chunk axis spans the FULL
-        ``prefill_chunk`` universe — the autotuner only moves
-        ``chunk_now`` along pow2 values inside it (decode-only steps land
-        on chunk bucket 1, the degenerate chunk)."""
-        return [(b, c, p) for b in _pow2s(self.ecfg.max_batch)
+    def prefill_bucket_shapes(self) -> List[Tuple[int, int, int, int]]:
+        """Every (batch-bucket, chunk-bucket, pages-bucket,
+        exchange-bucket) shape the chunked prefill step can be jitted
+        at."""
+        return [(b, c, p, g) for b in _pow2s(self.ecfg.max_batch)
                 for c in _pow2s(self.ecfg.prefill_chunk)
-                for p in _pow2s(self._max_pages())]
+                for p in _pow2s(self._max_pages())
+                for g in self._gw_pow2s()]
+
+    def fused_bucket_shapes(self) -> List[Tuple[int, int, int, int]]:
+        """Every (batch-bucket, chunk-bucket, pages-bucket,
+        exchange-bucket) shape the fused step can be jitted at.  The
+        chunk axis spans the FULL ``prefill_chunk`` universe — the
+        autotuner only moves ``chunk_now`` along pow2 values inside it
+        (decode-only steps land on chunk bucket 1, the degenerate
+        chunk)."""
+        return [(b, c, p, g) for b in _pow2s(self.ecfg.max_batch)
+                for c in _pow2s(self.ecfg.prefill_chunk)
+                for p in _pow2s(self._max_pages())
+                for g in self._gw_pow2s()]
 
     def bucket_count(self) -> int:
         """Upper bound on paged-decode jit compilations: one per
@@ -608,6 +658,7 @@ class InferenceEngine:
         maxp = max(-(-(r.prefill_pos + n) // page) for r, _, n in spans)
         Pp = _bucket(maxp)
         sink = self.kv.sink
+        plan = self.kv.step_plan()
         toks = np.zeros((Bp, Cp), np.int32)
         starts = np.zeros((Bp,), np.int32)
         lengths = np.zeros((Bp,), np.int32)
@@ -621,33 +672,40 @@ class InferenceEngine:
             starts[i] = s0
             lengths[i] = s0 + n
             last_idx[i] = n - 1
-            slots, offs = self.kv.request_scatter_indices(r.rid, s0, n)
+            slots, offs = plan.scatter_indices(r.rid, s0, n)
             wslots[i, :, :n] = slots
             woffs[i, :n] = offs
-            for g in range(Hkv):
-                # the chain covers the FULL prompt; the kernel only reads
-                # pages with base < lengths[i], all within the first Pp
-                chain = self.kv.block_table(r.rid, g)[:Pp]
-                tables[i, g, :len(chain)] = chain
-        self._prefill_shapes.add((Bp, Cp, Pp))
-        host = (tables, lengths, starts, wslots, woffs, toks, last_idx)
+            # the chain covers the FULL prompt; the kernel only reads
+            # pages with base < lengths[i], so only those are staged from
+            # remote shards (anchor-local pages keep the full chain)
+            tables[i] = plan.block_table_matrix(r.rid, Pp,
+                                                n_tokens=s0 + n)
+        Gp = _bucket0(plan.gather_count)
+        exch = plan.exchange_arrays(Gp)
+        self._prefill_shapes.add((Bp, Cp, Pp, Gp))
+        host = exch + (tables, lengths, starts, wslots, woffs, toks,
+                       last_idx)
         h2d = sum(a.nbytes for a in host)
         dev = self._upload(host, h2d)
+        self._c_gather_d2d.inc(plan.d2d_bytes())
         with self.tracer.span("prefill_chunk",
                               args={"batch": Bp, "chunk": Cp, "pages": Pp}):
             if self._trace_modules:
                 a0, d0 = self._probe_totals()
-                logits, self.kv.kpool, self.kv.vpool = \
-                    T.paged_prefill_chunk_traced(
-                        cfg, self.params, self.kv.kpool, self.kv.vpool,
-                        *dev, tracer=self.tracer,
-                        span_args=self._module_span_args(
-                            [r for r, _, _ in spans]))
+                kps, vps = self.kv.pools()
+                logits, kps, vps = T.sharded_prefill_chunk_traced(
+                    cfg, self.params, kps, vps, self.kv.anchor,
+                    self.kv.sink, *dev, tracer=self.tracer,
+                    span_args=self._module_span_args(
+                        [r for r, _, _ in spans]))
+                self.kv.install_pools(kps, vps)
                 a1, d1 = self._probe_totals()
                 self._attribute_module_times(a1 - a0, d1 - d0)
             else:
-                logits, self.kv.kpool, self.kv.vpool = self._chunk_fn(
-                    self.params, self.kv.kpool, self.kv.vpool, *dev)
+                kps, vps = self.kv.pools()
+                logits, kps, vps = self._chunk_fn(
+                    self.params, kps, vps, *dev)
+                self.kv.install_pools(kps, vps)
             self.tracer.sync(logits)
         self._c_model_calls.inc()
         self._c_h2d.inc(h2d)
@@ -719,6 +777,7 @@ class InferenceEngine:
         maxp = max(-(-r.ctx_len // page) for r in active)
         Pp = _bucket(maxp)
         sink = self.kv.sink
+        plan = self.kv.step_plan()
         tables = np.full((Bp, Hkv, Pp), sink, np.int32)
         lengths = np.zeros((Bp,), np.int32)
         wslot = np.full((Bp, Hkv), sink, np.int32)
@@ -727,32 +786,38 @@ class InferenceEngine:
         toks = np.zeros((Bp, 1), np.int32)
         for i, r in enumerate(active):
             p_new = r.ctx_len - 1
-            for g in range(Hkv):
-                chain = self.kv.block_table(r.rid, g)
-                tables[i, g, :len(chain)] = chain
-                wslot[i, g] = chain[p_new // page]
+            tables[i] = plan.block_table_matrix(r.rid, Pp,
+                                                n_tokens=p_new + 1)
+            slots, offs = plan.scatter_indices(r.rid, p_new, 1)
+            wslot[i] = slots[:, 0]
             lengths[i] = p_new + 1
-            woff[i] = p_new % page
+            woff[i] = offs[0]
             pos[i] = p_new
             toks[i, 0] = r.output[-1]
-        self._decode_shapes.add((Bp, Pp))
-        host = (tables, lengths, wslot, woff, toks, pos)
+        Gp = _bucket0(plan.gather_count)
+        exch = plan.exchange_arrays(Gp)
+        self._decode_shapes.add((Bp, Pp, Gp))
+        host = exch + (tables, lengths, wslot, woff, toks, pos)
         h2d = sum(a.nbytes for a in host)
         dev = self._upload(host, h2d)
+        self._c_gather_d2d.inc(plan.d2d_bytes())
         with self.tracer.span("paged_decode",
                               args={"batch": Bp, "pages": Pp}):
             if self._trace_modules:
                 a0, d0 = self._probe_totals()
-                logits, self.kv.kpool, self.kv.vpool = \
-                    T.paged_decode_step_traced(
-                        cfg, self.params, self.kv.kpool, self.kv.vpool,
-                        *dev, tracer=self.tracer,
-                        span_args=self._module_span_args(active))
+                kps, vps = self.kv.pools()
+                logits, kps, vps = T.sharded_decode_step_traced(
+                    cfg, self.params, kps, vps, self.kv.anchor,
+                    self.kv.sink, *dev, tracer=self.tracer,
+                    span_args=self._module_span_args(active))
+                self.kv.install_pools(kps, vps)
                 a1, d1 = self._probe_totals()
                 self._attribute_module_times(a1 - a0, d1 - d0)
             else:
-                logits, self.kv.kpool, self.kv.vpool = self._paged_fn(
-                    self.params, self.kv.kpool, self.kv.vpool, *dev)
+                kps, vps = self.kv.pools()
+                logits, kps, vps = self._paged_fn(
+                    self.params, kps, vps, *dev)
+                self.kv.install_pools(kps, vps)
             self.tracer.sync(logits)
         self._c_model_calls.inc()
         self._c_h2d.inc(h2d)
@@ -854,12 +919,13 @@ class InferenceEngine:
         maxp = max(-(-(s + n) // page) for _, s, n in rows)
         Pp = _bucket(maxp)
         sink = self.kv.sink
+        plan = self.kv.step_plan()
         toks = np.zeros((Bp, Cp), np.int32)
         starts = np.zeros((Bp,), np.int32)
         lengths = np.zeros((Bp,), np.int32)
         last_idx = np.zeros((Bp,), np.int32)
         tables = np.full((Bp, Hkv, Pp), sink, np.int32)
-        ws, wo = self.kv.mixed_scatter_indices(rows, Cp)
+        ws, wo = plan.mixed_scatter_indices(rows, Cp)
         wslots = np.full((Bp, Hkv, Cp), sink, np.int32)
         woffs = np.zeros((Bp, Cp), np.int32)
         wslots[:B] = ws
@@ -869,16 +935,21 @@ class InferenceEngine:
             lengths[i] = s0 + n
             last_idx[i] = n - 1
             # the chain covers the FULL prompt; the kernel only reads
-            # pages with base < lengths[i], all within the first Pp
-            tables[i] = self.kv.block_table_matrix(rid, Pp)
+            # pages with base < lengths[i], so only those are staged from
+            # remote shards (anchor-local pages keep the full chain)
+            tables[i] = plan.block_table_matrix(rid, Pp, n_tokens=s0 + n)
         for i, r in enumerate(dec):
             toks[i, 0] = r.output[-1]
         for j, (r, full, n) in enumerate(spans):
             toks[len(dec) + j, :n] = full[r.prefill_pos:r.prefill_pos + n]
-        self._fused_shapes.add((Bp, Cp, Pp))
-        host = (tables, lengths, starts, wslots, woffs, toks, last_idx)
+        Gp = _bucket0(plan.gather_count)
+        exch = plan.exchange_arrays(Gp)
+        self._fused_shapes.add((Bp, Cp, Pp, Gp))
+        host = exch + (tables, lengths, starts, wslots, woffs, toks,
+                       last_idx)
         h2d = sum(a.nbytes for a in host)
         dev = self._upload(host, h2d)
+        self._c_gather_d2d.inc(plan.d2d_bytes())
         tr = self.tracer
         n_pre = sum(n for _, _, n in spans)
         # timing the step for the autotuner costs a device sync, so only
@@ -892,17 +963,20 @@ class InferenceEngine:
             t0 = time.perf_counter() if (tr.enabled or time_it) else 0.0
             if self._trace_modules:
                 a0, d0 = self._probe_totals()
-                logits, self.kv.kpool, self.kv.vpool = \
-                    T.paged_fused_step_traced(
-                        cfg, self.params, self.kv.kpool, self.kv.vpool,
-                        *dev, tracer=tr,
-                        span_args=self._module_span_args(
-                            dec + [r for r, _, _ in spans]))
+                kps, vps = self.kv.pools()
+                logits, kps, vps = T.sharded_fused_step_traced(
+                    cfg, self.params, kps, vps, self.kv.anchor,
+                    self.kv.sink, *dev, tracer=tr,
+                    span_args=self._module_span_args(
+                        dec + [r for r, _, _ in spans]))
+                self.kv.install_pools(kps, vps)
                 a1, d1 = self._probe_totals()
                 self._attribute_module_times(a1 - a0, d1 - d0)
             else:
-                logits, self.kv.kpool, self.kv.vpool = self._fused_fn(
-                    self.params, self.kv.kpool, self.kv.vpool, *dev)
+                kps, vps = self.kv.pools()
+                logits, kps, vps = self._fused_fn(
+                    self.params, kps, vps, *dev)
+                self.kv.install_pools(kps, vps)
             tr.sync(logits)
             if tr.enabled or time_it:
                 if not tr.enabled:          # sync() above was a no-op
@@ -1026,12 +1100,36 @@ class InferenceEngine:
             return
         old = req.placement
         req.placement = dict(new_placement)
-        # map group chains to the new devices, moving pages physically
+        # Move group chains to their new devices by cross-pool copy.  Only
+        # bytes that PHYSICALLY moved are metered and handed to the hauler
+        # (as per-source-device tasks debited against the compute-overlap
+        # window in step()); an all-or-nothing refusal (destination shard
+        # full) is surfaced instead of silently booked.
         moved_bytes = 0.0
+        tasks: List[MigrationTask] = []
+        incomplete = 0
         for grp, dev in self._group_devices(req):
-            _, nbytes = self.kv.migrate_group(rid, grp, dev)
-            moved_bytes += nbytes
+            res = self.kv.migrate_group(rid, grp, dev)
+            if not res.complete:
+                incomplete += 1
+                continue
+            moved_bytes += res.nbytes
+            for src, pages in res.by_src.items():
+                tasks.append(MigrationTask(
+                    rid, src, dev, heads=float(self.cfg.gqa_ratio),
+                    nbytes=float(pages * self.kv.bytes_per_slot())))
+        if incomplete:
+            self._c_migr_partial.inc(incomplete)
+            warnings.warn(
+                f"migration of rid={rid} incomplete: {incomplete} head "
+                f"group(s) stayed on their source device (destination "
+                f"pool shard full); physical placement diverges from the "
+                f"dispatcher's until pages free up", RuntimeWarning,
+                stacklevel=2)
+        if tasks:
+            self.hauler.submit(tasks)
         self._c_migr.inc(moved_bytes)
+        self._c_d2d.inc(moved_bytes)
 
     # ------------------------------------------------------------------- step
     def step(self) -> Dict[str, float]:

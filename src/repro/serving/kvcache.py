@@ -2,23 +2,31 @@
 
 vLLM pages cache at (sequence, block) granularity; Hetis splits further on
 the head dimension so different head groups of ONE request can live on
-different devices.  A block here is (kv-head-group, page of tokens): the
-physical pool stores (layer, slot, page_size, head_dim) for K and V, and
-the block table maps (request, group, page_index) -> (device, slot).
+different devices.  A block here is (kv-head-group, page of tokens), and
+the block table maps (request, group, page_index) -> (device, local slot).
 
-The pool is **device-resident**: K/V live as JAX arrays and stay on the
-accelerator across decode steps.  All writes are batched ``.at[]`` scatters
-(one XLA scatter per prompt store / per decode step), so the engine's fast
-path never round-trips cache contents through the host — the Pallas
-paged-attention kernel consumes the pools plus ``(B, Hkv, max_pages)``
-block tables directly.  Layout is layer-major ``(L, slots, page, dh)`` so a
-``lax.scan`` over layers carries the pool and slices one contiguous layer
-per step.
+The pools are **sharded per device**: each device partition owns its own
+``(kpool, vpool)`` pair of JAX arrays with shape ``(L, slots+1, page, dh)``
+and device-LOCAL slot ids — a device's memory ceiling is the physical size
+of its own pool, and migrating a head group is a batched device-to-device
+copy between pools (no global-pool index moves).  All writes are batched
+``.at[]`` scatters, so the engine's fast path never round-trips cache
+contents through the host.  Layout is layer-major ``(L, slots, page, dh)``
+so a ``lax.scan`` over layers carries the pools and slices one contiguous
+layer per step.
 
-One extra ``sink`` slot (index ``num_slots``) pads bucketed batches: rows
-past the true batch size write their garbage token K/V there, and padded
-block-table entries point at it; the kernel's length mask guarantees it is
-never read into a real output.
+Every pool carries one ``sink`` slot (local index ``total``) padding
+bucketed batches: rows past the true batch size write their garbage token
+K/V there, and padded block-table entries point at it; the kernel's length
+mask guarantees it is never read into a real output.
+
+The **anchor** device (the engine's first primary) additionally reserves a
+``stage_slots``-page STAGING region beyond its sink.  The Pallas kernels
+consume exactly one pool pair, so a batch row whose pages live on another
+device is served by gathering those remote pages into the staging region
+inside the same jitted step (and writing dirty staged pages back after) —
+:class:`PoolStepPlan` builds the anchor-space block tables plus the
+gather/writeback lane arrays for one step.
 
 ``gather_dense`` reassembles a request's pages into the dense
 ``(L, ctx, Hkv, dh)`` view — the host-side reference path the fast path
@@ -28,7 +36,7 @@ replaces (kept as the token-exactness oracle and for MLA/ssm configs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -39,7 +47,7 @@ from repro.models.config import ModelConfig
 @dataclasses.dataclass
 class DevicePartition:
     device_id: int
-    slots: List[int]                    # free slot indices
+    slots: List[int]                    # free LOCAL slot indices
     total: int
 
     @property
@@ -51,49 +59,110 @@ class DevicePartition:
         return self.total - len(self.slots)
 
 
+@dataclasses.dataclass
+class MigrationResult:
+    """Outcome of one ``migrate_group`` call.
+
+    ``complete`` is False when the destination partition could not hold the
+    whole chain — in that case NOTHING moved (all-or-nothing, so one head
+    group's pages are never split across devices mid-request) and the
+    caller must not record a migration that never happened.  Iterable as
+    ``(moved, nbytes)`` for call sites that only meter bytes.
+    """
+
+    rid: int
+    group: int
+    dst_device: int
+    requested: int                      # pages that needed to move
+    moved: int
+    nbytes: float
+    complete: bool
+    by_src: Dict[int, int]              # pages moved per source device
+
+    def __iter__(self):
+        return iter((self.moved, self.nbytes))
+
+
 class PagedHeadCache:
-    """Physical pool + head-granular block tables."""
+    """Per-device physical pools + head-granular block tables."""
 
     def __init__(self, cfg: ModelConfig, device_slots: Dict[int, int],
-                 page_size: int = 16, dtype=np.float32):
+                 page_size: int = 16, dtype=None,
+                 anchor: Optional[int] = None, stage_slots: int = 0):
         assert cfg.attn_type == "gqa", \
             "paged head cache implemented for GQA; MLA/ssm use dense path"
         self.cfg = cfg
         self.page = page_size
-        total = sum(device_slots.values())
+        self.dtype = self.pool_dtype(cfg, dtype)
         L, dh = cfg.n_layers, cfg.head_dim
-        # +1: sink slot for padded batch rows (never read through a length
-        # mask, may be scribbled on by bucketed decode steps)
-        self.sink = total
-        self.kpool = jnp.zeros((L, total + 1, page_size, dh), dtype)
-        self.vpool = jnp.zeros((L, total + 1, page_size, dh), dtype)
+        self.anchor = next(iter(device_slots)) if anchor is None else anchor
+        assert self.anchor in device_slots, \
+            f"anchor device {self.anchor} has no pool partition"
+        self.stage = int(stage_slots)
+        self.kpools: Dict[int, jnp.ndarray] = {}
+        self.vpools: Dict[int, jnp.ndarray] = {}
         self.partitions: Dict[int, DevicePartition] = {}
-        start = 0
         for dev, n in device_slots.items():
-            self.partitions[dev] = DevicePartition(
-                dev, list(range(start, start + n)), n)
-            start += n
-        # (rid, group) -> list of (device, slot)
+            # +1: per-pool sink slot for padded batch rows (never read
+            # through a length mask, may be scribbled on by bucketed
+            # steps); the anchor also reserves the staging region
+            extra = 1 + (self.stage if dev == self.anchor else 0)
+            self.kpools[dev] = jnp.zeros((L, n + extra, page_size, dh),
+                                         self.dtype)
+            self.vpools[dev] = jnp.zeros((L, n + extra, page_size, dh),
+                                         self.dtype)
+            self.partitions[dev] = DevicePartition(dev, list(range(n)), n)
+        # anchor-space sink: the index every kernel-facing table pads with
+        self.sink = self.partitions[self.anchor].total
+        # (rid, group) -> list of (device, local slot)
         self.tables: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
         # (rid, group) -> tokens stored
         self.lengths: Dict[Tuple[int, int], int] = {}
 
     # -- helpers -------------------------------------------------------------
     @classmethod
-    def pool_dtype(cls, cfg: ModelConfig) -> np.dtype:
-        """Physical pool dtype for a config — the single source of truth
-        for byte accounting (no hardcoded ``* 4`` itemsizes elsewhere)."""
-        return np.dtype(np.float32)
+    def pool_dtype(cls, cfg: ModelConfig, dtype=None) -> np.dtype:
+        """Physical pool dtype — the single source of truth for byte
+        accounting.  An explicit ``dtype`` wins; otherwise the config's
+        ``kv_dtype`` (``kv_cache_dtype`` falling back to the activation
+        dtype) decides, so bf16/f8 configs report what their pools really
+        occupy instead of a hardcoded float32."""
+        if dtype is not None:
+            return np.dtype(jnp.dtype(dtype))
+        return np.dtype(jnp.dtype(cfg.kv_dtype))
+
+    def sink_of(self, device_id: int) -> int:
+        """Local sink slot index of one device's pool."""
+        return self.partitions[device_id].total
 
     def slots_per_token_group(self) -> float:
         return 1.0 / self.page
 
     def bytes_per_slot(self) -> int:
         return int(2 * self.cfg.n_layers * self.page * self.cfg.head_dim
-                   * self.kpool.dtype.itemsize)
+                   * self.dtype.itemsize)
 
     def free_slots(self, device_id: int) -> int:
         return self.partitions[device_id].free
+
+    def free_bytes(self, device_id: int) -> int:
+        """Real free bytes of one device partition — what the dispatcher's
+        Eq 6 capacity constraint reads (per-partition, not aggregate)."""
+        return self.partitions[device_id].free * self.bytes_per_slot()
+
+    def pools(self) -> Tuple[Dict[int, jnp.ndarray], Dict[int, jnp.ndarray]]:
+        """The per-device pool dicts, as passed to the jitted fast paths."""
+        return dict(self.kpools), dict(self.vpools)
+
+    def install_pools(self, kpools: Dict[int, jnp.ndarray],
+                      vpools: Dict[int, jnp.ndarray]) -> None:
+        """Adopt the pool pytrees returned by a jitted step."""
+        self.kpools = dict(kpools)
+        self.vpools = dict(vpools)
+
+    def step_plan(self) -> "PoolStepPlan":
+        """Fresh anchor-space remap for one jitted step."""
+        return PoolStepPlan(self)
 
     # -- allocation ------------------------------------------------------------
     def ensure_capacity(self, rid: int, group: int, device_id: int,
@@ -127,87 +196,50 @@ class PagedHeadCache:
     def store_token(self, rid: int, group: int, pos: int,
                     k: np.ndarray, v: np.ndarray) -> None:
         """k, v: (L, dh) for this group at position pos."""
-        dev_slot = self.tables[(rid, group)][pos // self.page]
+        dev, slot = self.tables[(rid, group)][pos // self.page]
         off = pos % self.page
-        cdt = self.kpool.dtype
-        self.kpool = self.kpool.at[:, dev_slot[1], off].set(
+        cdt = self.dtype
+        self.kpools[dev] = self.kpools[dev].at[:, slot, off].set(
             jnp.asarray(k, cdt))
-        self.vpool = self.vpool.at[:, dev_slot[1], off].set(
+        self.vpools[dev] = self.vpools[dev].at[:, slot, off].set(
             jnp.asarray(v, cdt))
 
     def store_prompt(self, rid: int, group: int, k: np.ndarray,
                      v: np.ndarray) -> None:
-        """k, v: (L, ctx, dh) — bulk store after prefill; ONE scatter."""
+        """k, v: (L, ctx, dh) — bulk store after prefill; one scatter per
+        device the chain touches (a single-device chain stays ONE scatter)."""
         ctx = k.shape[1]
-        slots, offs = self._scatter_indices(rid, group, ctx)
-        cdt = self.kpool.dtype
-        self.kpool = self.kpool.at[:, slots, offs].set(jnp.asarray(k, cdt))
-        self.vpool = self.vpool.at[:, slots, offs].set(jnp.asarray(v, cdt))
+        devs, slots, offs = self._scatter_indices(rid, group, ctx)
+        cdt = self.dtype
+        kj = jnp.asarray(k, cdt)
+        vj = jnp.asarray(v, cdt)
+        for dev in np.unique(devs):
+            m = devs == dev
+            self.kpools[dev] = self.kpools[dev].at[:, slots[m],
+                                                   offs[m]].set(kj[:, m])
+            self.vpools[dev] = self.vpools[dev].at[:, slots[m],
+                                                   offs[m]].set(vj[:, m])
 
     def store_prompt_request(self, rid: int, k, v) -> None:
-        """Bulk store a whole request's prompt K/V for ALL head groups with
-        one scatter per pool.  k, v: (L, ctx, Hkv, dh) — the layout emitted
-        by ``transformer.prefill`` (device array; no host round-trip)."""
-        ctx = k.shape[1]
-        slots, offs = self.request_scatter_indices(rid, 0, ctx)
-        cdt = self.kpool.dtype
-        kj = jnp.transpose(jnp.asarray(k, cdt), (0, 2, 1, 3))  # (L,Hkv,ctx,dh)
-        vj = jnp.transpose(jnp.asarray(v, cdt), (0, 2, 1, 3))
-        self.kpool = self.kpool.at[:, slots, offs[None, :]].set(kj)
-        self.vpool = self.vpool.at[:, slots, offs[None, :]].set(vj)
-
-    def request_scatter_indices(self, rid: int, start: int, n: int
-                                ) -> Tuple[np.ndarray, np.ndarray]:
-        """(Hkv, n) slot ids + (n,) page offsets covering token positions
-        [start, start + n) of EVERY head group, in one vectorized NumPy
-        pass over the group chains (no per-group index loop) — feeds both
-        the bulk prompt store and the chunked-prefill write indices."""
-        Hkv = self.cfg.n_kv_heads
-        t = np.arange(start, start + n)
-        page_idx = t // self.page
-        # all groups of one request hold the same token count, so the
-        # chain matrix is rectangular over the pages this range touches
-        chains = np.asarray(
-            [[s for _, s in self.tables[(rid, g)]] for g in range(Hkv)],
-            np.int32)
-        return chains[:, page_idx], (t % self.page).astype(np.int32)
-
-    def mixed_scatter_indices(self, rows, C: int
-                              ) -> Tuple[np.ndarray, np.ndarray]:
-        """Write indices for a MIXED row batch (the fused prefill+decode
-        step): ``rows`` is a list of ``(rid, start, n)`` spans — a decode
-        row is the degenerate ``n == 1`` span at ``start == ctx - 1``.
-        Returns ``(B, Hkv, C)`` slot ids and ``(B, C)`` page offsets,
-        sink-padded past each row's ``n`` and past the true batch, so one
-        call builds the whole fused batch's write plan."""
-        Hkv = self.cfg.n_kv_heads
-        B = len(rows)
-        wslots = np.full((B, Hkv, C), self.sink, np.int32)
-        woffs = np.zeros((B, C), np.int32)
-        for i, (rid, start, n) in enumerate(rows):
-            slots, offs = self.request_scatter_indices(rid, start, n)
-            wslots[i, :, :n] = slots
-            woffs[i, :n] = offs
-        return wslots, woffs
-
-    def block_table_matrix(self, rid: int, max_pages: int) -> np.ndarray:
-        """(Hkv, max_pages) int32 slot-id matrix for one request, sink-
-        padded (and truncated) to ``max_pages`` — the row layout the
-        paged kernels' block tables want."""
-        Hkv = self.cfg.n_kv_heads
-        out = np.full((Hkv, max_pages), self.sink, np.int32)
-        for g in range(Hkv):
-            chain = self.block_table(rid, g)[:max_pages]
-            out[g, :len(chain)] = chain
-        return out
+        """Bulk store a whole request's prompt K/V for ALL head groups.
+        k, v: (L, ctx, Hkv, dh) — the layout emitted by
+        ``transformer.prefill`` (device array; no host round-trip).  One
+        scatter per (group-device) pair — single-device groups keep the
+        one-scatter-per-pool behavior."""
+        for g in range(self.cfg.n_kv_heads):
+            self.store_prompt(rid, g, k[:, :, g], v[:, :, g])
 
     def _scatter_indices(self, rid: int, group: int, ctx: int
-                         ) -> Tuple[np.ndarray, np.ndarray]:
-        """(slot, offset) per token position for one group chain."""
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(device, local slot, page offset) per token position for one
+        group chain."""
         chain = self.tables[(rid, group)]
         t = np.arange(ctx)
+        chain_devs = np.asarray([d for d, _ in chain], np.int32)
         chain_slots = np.asarray([s for _, s in chain], np.int32)
-        return chain_slots[t // self.page], (t % self.page).astype(np.int32)
+        page_idx = t // self.page
+        return (chain_devs[page_idx], chain_slots[page_idx],
+                (t % self.page).astype(np.int32))
 
     # -- retrieval ---------------------------------------------------------------
     def gather_dense(self, rid: int, max_len: int) -> Tuple[np.ndarray,
@@ -216,22 +248,26 @@ class PagedHeadCache:
         host-side reference path the paged fast path replaces."""
         cfg = self.cfg
         L, dh = cfg.n_layers, cfg.head_dim
-        kp = np.asarray(self.kpool)
-        vp = np.asarray(self.vpool)
-        K = np.zeros((L, max_len, cfg.n_kv_heads, dh), kp.dtype)
+        kp = {d: np.asarray(p) for d, p in self.kpools.items()}
+        vp = {d: np.asarray(p) for d, p in self.vpools.items()}
+        K = np.zeros((L, max_len, cfg.n_kv_heads, dh), self.dtype)
         V = np.zeros_like(K)
         for g in range(cfg.n_kv_heads):
             key = (rid, g)
             n = min(self.lengths.get(key, 0), max_len)
             if n <= 0:
                 continue
-            slots, offs = self._scatter_indices(rid, g, n)
-            K[:, :n, g] = kp[:, slots, offs]
-            V[:, :n, g] = vp[:, slots, offs]
+            devs, slots, offs = self._scatter_indices(rid, g, n)
+            t = np.arange(n)
+            for dev in np.unique(devs):
+                m = devs == dev
+                K[:, t[m], g] = kp[dev][:, slots[m], offs[m]]
+                V[:, t[m], g] = vp[dev][:, slots[m], offs[m]]
         return K, V
 
-    def block_table(self, rid: int, group: int) -> List[int]:
-        return [slot for _, slot in self.tables.get((rid, group), [])]
+    def block_table(self, rid: int, group: int) -> List[Tuple[int, int]]:
+        """One group's page chain as (device, local slot) pairs."""
+        return list(self.tables.get((rid, group), []))
 
     # -- release / migration --------------------------------------------------------
     def release(self, rid: int) -> int:
@@ -246,48 +282,206 @@ class PagedHeadCache:
         return released
 
     def migrate_group(self, rid: int, group: int, dst_device: int
-                      ) -> Tuple[int, float]:
-        """Move one head group's pages to another device partition.
-        Returns (pages_moved, bytes_moved).  Physical copy included — the
-        live-migration path the Hauler schedules into overlap windows."""
+                      ) -> MigrationResult:
+        """Move one head group's pages to another device partition by
+        BATCHED CROSS-POOL COPY (one gather/scatter pair per source
+        device) — the physical device-to-device transfer the Hauler
+        schedules into compute-overlap windows.
+
+        All-or-nothing: if the destination partition cannot hold the whole
+        chain, nothing moves and the result reports ``complete=False`` so
+        callers never book a migration that did not happen."""
         key = (rid, group)
         chain = self.tables.get(key, [])
         dst = self.partitions[dst_device]
-        moved = 0
-        nbytes = 0.0
-        new_chain = []
-        src_slots: List[int] = []
-        dst_slots: List[int] = []
-        for dev, slot in chain:
-            if dev == dst_device or not dst.slots:
-                new_chain.append((dev, slot))
-                continue
-            nslot = dst.slots.pop()
-            src_slots.append(slot)
-            dst_slots.append(nslot)
-            self.partitions[dev].slots.append(slot)
-            new_chain.append((dst_device, nslot))
-            moved += 1
-            nbytes += self.bytes_per_slot()
-        if moved:
-            src = np.asarray(src_slots, np.int32)
-            dst_idx = np.asarray(dst_slots, np.int32)
-            self.kpool = self.kpool.at[:, dst_idx].set(self.kpool[:, src])
-            self.vpool = self.vpool.at[:, dst_idx].set(self.vpool[:, src])
-        self.tables[key] = new_chain
-        return moved, nbytes
+        pending = [(i, dev, slot) for i, (dev, slot) in enumerate(chain)
+                   if dev != dst_device]
+        if not pending:
+            return MigrationResult(rid, group, dst_device, 0, 0, 0.0,
+                                   True, {})
+        if dst.free < len(pending):
+            return MigrationResult(rid, group, dst_device, len(pending),
+                                   0, 0.0, False, {})
+        by_src: Dict[int, int] = {}
+        for src_dev in sorted({dev for _, dev, _ in pending}):
+            lanes = [(i, slot) for i, dev, slot in pending
+                     if dev == src_dev]
+            src = np.asarray([s for _, s in lanes], np.int32)
+            new_slots = [dst.slots.pop() for _ in lanes]
+            dst_idx = np.asarray(new_slots, np.int32)
+            self.kpools[dst_device] = self.kpools[dst_device].at[
+                :, dst_idx].set(self.kpools[src_dev][:, src])
+            self.vpools[dst_device] = self.vpools[dst_device].at[
+                :, dst_idx].set(self.vpools[src_dev][:, src])
+            for (i, slot), ns in zip(lanes, new_slots):
+                chain[i] = (dst_device, ns)
+                self.partitions[src_dev].slots.append(slot)
+            by_src[src_dev] = len(lanes)
+        moved = len(pending)
+        return MigrationResult(rid, group, dst_device, moved, moved,
+                               float(moved * self.bytes_per_slot()),
+                               True, by_src)
 
     # -- invariants (used by hypothesis tests) -----------------------------------------
     def check_invariants(self) -> None:
-        used = set()
+        """Per-partition bookkeeping invariants: no slot double-booked
+        within a pool, no pool's sink/staging region ever allocated, and
+        every partition's used + free == total."""
+        used: Dict[int, set] = {dev: set() for dev in self.partitions}
         for key, chain in self.tables.items():
             for dev, slot in chain:
-                assert slot not in used, f"slot {slot} double-booked"
-                assert slot != self.sink, "sink slot allocated"
-                used.add(slot)
+                part = self.partitions[dev]
+                assert 0 <= slot < part.total, \
+                    f"device {dev} slot {slot} outside the allocatable " \
+                    f"range (sink/staging slot handed out)"
+                assert slot not in used[dev], \
+                    f"device {dev} slot {slot} double-booked"
+                used[dev].add(slot)
         for dev, part in self.partitions.items():
             for s in part.slots:
-                assert s not in used, f"slot {s} both free and used"
-        total = sum(p.total for p in self.partitions.values())
-        n_free = sum(p.free for p in self.partitions.values())
-        assert len(used) + n_free == total
+                assert s not in used[dev], \
+                    f"device {dev} slot {s} both free and used"
+            assert len(used[dev]) + part.free == part.total, \
+                f"device {dev} leaked slots"
+
+
+class PoolStepPlan:
+    """Anchor-space remap of the sharded pools for ONE jitted step.
+
+    The paged kernels read exactly one pool pair, so every block-table /
+    scatter index handed to a kernel is an index into the ANCHOR pool.
+    Anchor-local pages map to themselves; each distinct remote page is
+    assigned a staging slot (beyond the anchor's sink) and recorded as a
+    gather lane ``(device, src_slot, staging_idx)``; remote pages that are
+    WRITTEN during the step additionally record a writeback lane
+    ``(device, staging_idx, dst_slot)``.  The jitted step copies gather
+    lanes in before the forward pass and writeback lanes out after — the
+    whole exchange stays inside one jit.  Lane counts are pow2-bucketed by
+    the engine (``exchange_arrays``) so compile counts stay bounded.
+    """
+
+    def __init__(self, kv: PagedHeadCache):
+        self.kv = kv
+        self.anchor = kv.anchor
+        self._base = kv.partitions[kv.anchor].total + 1  # first staging idx
+        self._map: Dict[Tuple[int, int], int] = {}
+        self._g: List[Tuple[int, int, int]] = []   # (dev, src_slot, stage)
+        self._w: List[Tuple[int, int, int]] = []   # (dev, stage, dst_slot)
+        self._wseen: set = set()
+
+    # -- lane bookkeeping ---------------------------------------------------
+    def anchor_index(self, dev: int, slot: int, write: bool = False) -> int:
+        """Anchor-pool index backing (dev, slot) this step; remote pages
+        get a staging slot + gather lane (and a writeback lane if
+        ``write``)."""
+        if dev == self.anchor:
+            return slot
+        lane_key = (dev, slot)
+        idx = self._map.get(lane_key)
+        if idx is None:
+            if len(self._map) >= self.kv.stage:
+                raise RuntimeError(
+                    f"staging region exhausted ({self.kv.stage} slots): "
+                    f"a step referenced more remote pages than "
+                    f"max_batch * n_kv_heads * pages_per_seq")
+            idx = self._base + len(self._map)
+            self._map[lane_key] = idx
+            self._g.append((dev, slot, idx))
+        if write and lane_key not in self._wseen:
+            self._wseen.add(lane_key)
+            self._w.append((dev, idx, slot))
+        return idx
+
+    @property
+    def gather_count(self) -> int:
+        return len(self._g)
+
+    @property
+    def writeback_count(self) -> int:
+        return len(self._w)
+
+    def d2d_bytes(self) -> float:
+        """Device-to-device bytes this step's exchange moves (staging
+        gathers + dirty-page writebacks)."""
+        return float((len(self._g) + len(self._w))
+                     * self.kv.bytes_per_slot())
+
+    # -- kernel-facing index builders ---------------------------------------
+    def block_table_matrix(self, rid: int, max_pages: int,
+                           n_tokens: Optional[int] = None) -> np.ndarray:
+        """(Hkv, max_pages) int32 anchor-space table for one request,
+        sink-padded (and truncated) to ``max_pages``.  Only pages holding
+        tokens below ``n_tokens`` are staged from remote devices (the
+        kernel's length mask never reads beyond them); anchor-local pages
+        keep their full chain."""
+        kv = self.kv
+        Hkv = kv.cfg.n_kv_heads
+        out = np.full((Hkv, max_pages), kv.sink, np.int32)
+        for g in range(Hkv):
+            chain = kv.tables.get((rid, g), [])
+            n = kv.lengths.get((rid, g), 0) if n_tokens is None else n_tokens
+            need = -(-n // kv.page)
+            for p in range(min(len(chain), max_pages)):
+                dev, slot = chain[p]
+                if p < need:
+                    out[g, p] = self.anchor_index(dev, slot)
+                elif dev == self.anchor:
+                    out[g, p] = slot
+        return out
+
+    def scatter_indices(self, rid: int, start: int, n: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """(Hkv, n) anchor-space write slots + (n,) page offsets covering
+        token positions [start, start + n) of EVERY head group.  Remote
+        write pages are staged AND marked for writeback."""
+        kv = self.kv
+        Hkv = kv.cfg.n_kv_heads
+        t = np.arange(start, start + n)
+        page_idx = t // kv.page
+        p0, p1 = int(page_idx[0]), int(page_idx[-1])
+        slots = np.zeros((Hkv, n), np.int32)
+        for g in range(Hkv):
+            chain = kv.tables[(rid, g)]
+            amap = np.asarray(
+                [self.anchor_index(dev, slot, write=True)
+                 for dev, slot in chain[p0:p1 + 1]], np.int32)
+            slots[g] = amap[page_idx - p0]
+        return slots, (t % kv.page).astype(np.int32)
+
+    def mixed_scatter_indices(self, rows: Sequence[Tuple[int, int, int]],
+                              C: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Write indices for a MIXED row batch (the fused prefill+decode
+        step): ``rows`` is a list of ``(rid, start, n)`` spans — a decode
+        row is the degenerate ``n == 1`` span at ``start == ctx - 1``.
+        Returns ``(B, Hkv, C)`` anchor-space slot ids and ``(B, C)`` page
+        offsets, sink-padded past each row's ``n``."""
+        kv = self.kv
+        Hkv = kv.cfg.n_kv_heads
+        B = len(rows)
+        wslots = np.full((B, Hkv, C), kv.sink, np.int32)
+        woffs = np.zeros((B, C), np.int32)
+        for i, (rid, start, n) in enumerate(rows):
+            slots, offs = self.scatter_indices(rid, start, n)
+            wslots[i, :, :n] = slots
+            woffs[i, :n] = offs
+        return wslots, woffs
+
+    def exchange_arrays(self, n: int) -> Tuple[np.ndarray, ...]:
+        """``(g_dev, g_src, g_dst, w_dev, w_src, w_dst)`` int32 lane
+        arrays padded to ``n`` lanes (the engine's pow2 bucket).  Padded
+        lanes carry device -1 — matching no pool, the jitted exchange
+        degrades them to harmless sink-to-sink copies."""
+        kv = self.kv
+        assert len(self._g) <= n and len(self._w) <= n, \
+            (len(self._g), len(self._w), n)
+        g_dev = np.full((n,), -1, np.int32)
+        g_src = np.zeros((n,), np.int32)
+        g_dst = np.full((n,), kv.sink, np.int32)
+        for i, (d, s, t) in enumerate(self._g):
+            g_dev[i], g_src[i], g_dst[i] = d, s, t
+        w_dev = np.full((n,), -1, np.int32)
+        w_src = np.full((n,), kv.sink, np.int32)
+        w_dst = np.zeros((n,), np.int32)
+        for i, (d, s, t) in enumerate(self._w):
+            w_dev[i], w_src[i], w_dst[i] = d, s, t
+        return g_dev, g_src, g_dst, w_dev, w_src, w_dst

@@ -1,9 +1,10 @@
 """Per-bucket lowering checks: every shape the pow2 bucketing can ever
 present to the jitted paged decode / chunked prefill functions must lower
-cleanly.  ``jax.jit(...).lower`` traces the full function (scan over
-layers, scatter writes, the Pallas grid/block specs) without executing, so
-a shape bug in ANY bucket — not just the ones a workload happens to hit —
-fails here, on CPU, without a TPU in the loop."""
+cleanly.  ``jax.jit(...).lower`` traces the full function (pool-shard
+staging exchange, scan over layers, scatter writes, the Pallas grid/block
+specs) without executing, so a shape bug in ANY bucket — not just the
+ones a workload happens to hit — fails here, on CPU, without a TPU in the
+loop."""
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +27,7 @@ S32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
 def make_engine():
     cl = ClusterSpec.build([("A100", 1), ("3090", 1), ("P100", 1)])
     # small bounds keep the bucket universe enumerable: B in {1,2},
-    # pages in {1,2}, chunk in {1,2,4,8}
+    # pages in {1,2}, chunk in {1,2,4,8}, exchange lanes in {0,1,2,4,8}
     return InferenceEngine(CFG, PARAMS, cl, primary_ids=[0],
                            pool_ids=[1, 2],
                            engine_cfg=EngineConfig(max_batch=2, max_seq=32,
@@ -35,34 +36,49 @@ def make_engine():
 
 
 ENG = make_engine()
-POOL = jax.ShapeDtypeStruct(ENG.kv.kpool.shape, ENG.kv.kpool.dtype)
+# one ShapeDtypeStruct pytree per pool shard — the jitted fns take the
+# per-device pool dicts
+KPOOLS = {d: jax.ShapeDtypeStruct(p.shape, p.dtype)
+          for d, p in ENG.kv.kpools.items()}
+VPOOLS = {d: jax.ShapeDtypeStruct(p.shape, p.dtype)
+          for d, p in ENG.kv.vpools.items()}
 HKV = CFG.n_kv_heads
 
 
+def _exch(G):
+    """Gather + writeback lane operands at exchange bucket G."""
+    return (S32(G), S32(G), S32(G), S32(G), S32(G), S32(G))
+
+
 def test_bucket_universe_matches_counts():
-    assert len(ENG.decode_bucket_shapes()) == ENG.bucket_count() == 4
+    # stage = max_batch * Hkv * pages_per_seq = 2*2*2 = 8, so the
+    # exchange axis has buckets {0, 1, 2, 4, 8}
+    assert ENG._gw_pow2s() == [0, 1, 2, 4, 8]
+    assert len(ENG.decode_bucket_shapes()) == ENG.bucket_count() == 20
     assert len(ENG.prefill_bucket_shapes()) == ENG.prefill_bucket_count() \
-        == 16
-    assert len(ENG.fused_bucket_shapes()) == ENG.fused_bucket_count() == 16
+        == 80
+    assert len(ENG.fused_bucket_shapes()) == ENG.fused_bucket_count() == 80
 
 
-@pytest.mark.parametrize("B,P", ENG.decode_bucket_shapes())
-def test_decode_bucket_lowers(B, P):
-    ENG._paged_fn.lower(PARAMS, POOL, POOL, S32(B, HKV, P), S32(B),
-                        S32(B, HKV), S32(B), S32(B, 1), S32(B))
+@pytest.mark.parametrize("B,P,G", ENG.decode_bucket_shapes())
+def test_decode_bucket_lowers(B, P, G):
+    ENG._paged_fn.lower(PARAMS, KPOOLS, VPOOLS, *_exch(G),
+                        S32(B, HKV, P), S32(B), S32(B, HKV), S32(B),
+                        S32(B, 1), S32(B))
 
 
-@pytest.mark.parametrize("B,C,P", ENG.prefill_bucket_shapes())
-def test_prefill_bucket_lowers(B, C, P):
-    ENG._chunk_fn.lower(PARAMS, POOL, POOL, S32(B, HKV, P), S32(B),
-                        S32(B), S32(B, HKV, C), S32(B, C), S32(B, C),
-                        S32(B))
+@pytest.mark.parametrize("B,C,P,G", ENG.prefill_bucket_shapes())
+def test_prefill_bucket_lowers(B, C, P, G):
+    ENG._chunk_fn.lower(PARAMS, KPOOLS, VPOOLS, *_exch(G),
+                        S32(B, HKV, P), S32(B), S32(B), S32(B, HKV, C),
+                        S32(B, C), S32(B, C), S32(B))
 
 
-@pytest.mark.parametrize("B,C,P", ENG.fused_bucket_shapes())
-def test_fused_bucket_lowers(B, C, P):
+@pytest.mark.parametrize("B,C,P,G", ENG.fused_bucket_shapes())
+def test_fused_bucket_lowers(B, C, P, G):
     # every shape the fused packer can present — including C == 1, the
-    # decode-only degenerate chunk — must lower cleanly
-    ENG._fused_fn.lower(PARAMS, POOL, POOL, S32(B, HKV, P), S32(B),
-                        S32(B), S32(B, HKV, C), S32(B, C), S32(B, C),
-                        S32(B))
+    # decode-only degenerate chunk, and G == 0, the no-remote-pages
+    # common case — must lower cleanly
+    ENG._fused_fn.lower(PARAMS, KPOOLS, VPOOLS, *_exch(G),
+                        S32(B, HKV, P), S32(B), S32(B), S32(B, HKV, C),
+                        S32(B, C), S32(B, C), S32(B))

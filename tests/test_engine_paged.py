@@ -49,7 +49,9 @@ def random_prompts(n, seed=0, lo=4, hi=12):
 
 
 def test_paged_decode_step_matches_dense_decode_step():
-    """One jitted paged step == decode_step on the same cache state."""
+    """One jitted sharded step == decode_step on the same cache state —
+    with the two head groups' chains on DIFFERENT pool shards, so the
+    staging gather + writeback path is exercised."""
     from repro.serving.kvcache import PagedHeadCache
     prompt = [3, 1, 4, 1, 5, 9, 2, 6]
     ctx = len(prompt)
@@ -58,30 +60,43 @@ def test_paged_decode_step_matches_dense_decode_step():
                                {"tokens": jnp.asarray(prompt, jnp.int32)[None]},
                                max_seq=max_seq)
     tok = int(jnp.argmax(logits0[0]))
-    ref_logits, _ = T.decode_step(CFG, PARAMS, cache,
-                                  jnp.asarray([[tok]], jnp.int32))
+    ref_logits, ref_cache = T.decode_step(CFG, PARAMS, cache,
+                                          jnp.asarray([[tok]], jnp.int32))
 
     page = 4
-    kv = PagedHeadCache(CFG, {0: 8, 1: 8}, page_size=page)
+    kv = PagedHeadCache(CFG, {0: 8, 1: 8}, page_size=page, stage_slots=4)
     for g in range(CFG.n_kv_heads):
         kv.ensure_capacity(0, g, g % 2, ctx + 1)
         kv.lengths[(0, g)] = ctx
     kv.store_prompt_request(0, cache["groups"][0]["k"][:, 0, :ctx],
                             cache["groups"][0]["v"][:, 0, :ctx])
     maxp = -(-(ctx + 1) // page)
-    tables = np.full((1, CFG.n_kv_heads, maxp), kv.sink, np.int32)
-    wslot = np.zeros((1, CFG.n_kv_heads), np.int32)
-    for g in range(CFG.n_kv_heads):
-        chain = kv.block_table(0, g)
-        tables[0, g, :len(chain)] = chain
-        wslot[0, g] = chain[ctx // page]
-    logits, kp, vp = T.paged_decode_step(
-        CFG, PARAMS, kv.kpool, kv.vpool, jnp.asarray(tables),
-        jnp.asarray([ctx + 1], jnp.int32), jnp.asarray(wslot),
-        jnp.asarray([ctx % page], jnp.int32),
+    plan = kv.step_plan()
+    tables = plan.block_table_matrix(0, maxp, n_tokens=ctx + 1)[None]
+    slots, offs = plan.scatter_indices(0, ctx, 1)
+    wslot = slots[:, 0][None]
+    assert plan.gather_count > 0            # the remote chain was staged
+    exch = tuple(jnp.asarray(a) for a in
+                 plan.exchange_arrays(plan.gather_count))
+    kps, vps = kv.pools()
+    logits, kps, vps = T.sharded_decode_step(
+        CFG, PARAMS, kps, vps, kv.anchor, kv.sink, *exch,
+        jnp.asarray(tables), jnp.asarray([ctx + 1], jnp.int32),
+        jnp.asarray(wslot), jnp.asarray([offs[0]], jnp.int32),
         jnp.asarray([[tok]], jnp.int32), jnp.asarray([ctx], jnp.int32))
     np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
                                rtol=2e-4, atol=2e-4)
+    # the writeback must land the decode token's K/V in the REMOTE shard
+    kv.install_pools(kps, vps)
+    for g in range(CFG.n_kv_heads):
+        kv.lengths[(0, g)] = ctx + 1
+    K, V = kv.gather_dense(0, ctx + 1)
+    np.testing.assert_allclose(
+        K, np.asarray(ref_cache["groups"][0]["k"][:, 0, :ctx + 1]),
+        rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        V, np.asarray(ref_cache["groups"][0]["v"][:, 0, :ctx + 1]),
+        rtol=2e-4, atol=2e-4)
 
 
 def test_paged_engine_token_exact_vs_dense_engine():

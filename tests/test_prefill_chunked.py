@@ -55,38 +55,45 @@ def prompts_of_lengths(lens, seed=0):
 
 
 def test_paged_prefill_chunk_matches_dense_prefill():
-    """Driving paged_prefill_chunk by hand over a multi-chunk prompt
-    reproduces T.prefill's last-token logits AND pool-stored K/V."""
+    """Driving the sharded prefill chunk by hand over a multi-chunk
+    prompt — one head group's chain on a REMOTE pool shard — reproduces
+    T.prefill's last-token logits AND pool-stored K/V."""
     prompt = prompts_of_lengths([21], seed=3)[0]    # 2.6 pages
     ctx = len(prompt)
     ref_logits, cache = T.prefill(CFG, PARAMS,
                                   {"tokens": jnp.asarray(prompt,
                                                          jnp.int32)[None]},
                                   max_seq=64)
-    kv = PagedHeadCache(CFG, {0: 8, 1: 8}, page_size=PAGE)
+    kv = PagedHeadCache(CFG, {0: 8, 1: 8}, page_size=PAGE, stage_slots=4)
     for g in range(CFG.n_kv_heads):
         kv.ensure_capacity(0, g, g % 2, ctx)
     Hkv, chunk = CFG.n_kv_heads, 8
     maxp = -(-ctx // PAGE)
     logits = None
+    staged = 0
     for s0 in range(0, ctx, chunk):
         n = min(chunk, ctx - s0)
         toks = np.zeros((1, chunk), np.int32)
         toks[0, :n] = prompt[s0:s0 + n]
-        tables = np.full((1, Hkv, maxp), kv.sink, np.int32)
         wslots = np.full((1, Hkv, chunk), kv.sink, np.int32)
         woffs = np.zeros((1, chunk), np.int32)
-        slots, offs = kv.request_scatter_indices(0, s0, n)
+        plan = kv.step_plan()
+        slots, offs = plan.scatter_indices(0, s0, n)
         wslots[0, :, :n] = slots
         woffs[0, :n] = offs
-        for g in range(Hkv):
-            ch = kv.block_table(0, g)
-            tables[0, g, :len(ch)] = ch
-        logits, kv.kpool, kv.vpool = T.paged_prefill_chunk(
-            CFG, PARAMS, kv.kpool, kv.vpool, jnp.asarray(tables),
+        tables = plan.block_table_matrix(0, maxp, n_tokens=s0 + n)[None]
+        staged += plan.gather_count
+        exch = tuple(jnp.asarray(a) for a in
+                     plan.exchange_arrays(max(1, plan.gather_count)))
+        kps, vps = kv.pools()
+        logits, kps, vps = T.sharded_prefill_chunk(
+            CFG, PARAMS, kps, vps, kv.anchor, kv.sink, *exch,
+            jnp.asarray(tables),
             jnp.asarray([s0 + n], jnp.int32), jnp.asarray([s0], jnp.int32),
             jnp.asarray(wslots), jnp.asarray(woffs), jnp.asarray(toks),
             jnp.asarray([n - 1], jnp.int32))
+        kv.install_pools(kps, vps)
+    assert staged > 0                   # the remote chain really staged
     np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
                                rtol=2e-4, atol=2e-4)
     # pool contents must equal the dense prefill cache, token for token
